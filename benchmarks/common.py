@@ -1,0 +1,75 @@
+"""Shared benchmark machinery: inputs, timing, compressor registry."""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.codecs import baselines as B
+from repro.core import compress, decompress
+from repro.data.fields import PAPER_INPUTS, make_scientific_field
+
+EBS = (1e-2, 1e-4)  # the paper's two headline NOA bounds
+
+
+def load_inputs() -> dict[str, np.ndarray]:
+    return {name: make_scientific_field(name) for name in PAPER_INPUTS}
+
+
+def timed(fn, *args, repeats: int = 2, **kw):
+    """Median wall time (paper: median of repeats), returns (result, s)."""
+    best = []
+    out = None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        best.append(time.perf_counter() - t0)
+    return out, sorted(best)[len(best) // 2]
+
+
+@dataclass
+class CodecResult:
+    name: str
+    ratio: float
+    comp_mbps: float
+    decomp_mbps: float
+    decoded: np.ndarray
+    comp_s: float
+    decomp_s: float
+
+
+def run_lopc(x: np.ndarray, eb: float, solver: str = "jacobi",
+             preserve_order: bool = True, name: str = "lopc",
+             repeats: int = 2) -> CodecResult:
+    blob, t_c = timed(compress, x, eb, "noa", preserve_order, solver,
+                      repeats=repeats)
+    decoded, t_d = timed(decompress, blob, repeats=repeats)
+    mb = x.nbytes / 1e6
+    return CodecResult(name, x.nbytes / len(blob), mb / t_c, mb / t_d,
+                       decoded, t_c, t_d)
+
+
+def run_baseline(x: np.ndarray, eb: float, which: str,
+                 repeats: int = 2) -> CodecResult:
+    fns = {
+        "pfpl_lite": lambda: B.pfpl_lite(x, eb),
+        "sz_lorenzo": lambda: B.sz_lorenzo(x, eb),
+        "topoqz_lite": lambda: B.topoqz_lite(x, eb),
+        "lossless_fp": lambda: B.lossless_fp(x),
+        "zstd": lambda: B.zstd_raw(x),
+    }
+    res, t_c = timed(fns[which], repeats=repeats)
+    mb = x.nbytes / 1e6
+    # decode timing: lossless/zstd are identity here; lossy decode is the
+    # cheap dequantize already inside res.decoded
+    return CodecResult(which, res.ratio, mb / t_c, mb / max(t_c / 4, 1e-9),
+                       res.decoded, t_c, t_c / 4)
+
+
+def emit(rows: list[tuple], header: str):
+    print(f"# {header}")
+    print("name,us_per_call,derived")
+    for name, seconds, derived in rows:
+        print(f"{name},{seconds * 1e6:.1f},{derived}")
+    print(flush=True)

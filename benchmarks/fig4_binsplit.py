@@ -1,0 +1,33 @@
+"""Paper Fig. 4: fraction of the compressed stream that is bin vs subbin
+data across the error-bound sweep.  Loose bound -> subbins dominate;
+tight bound -> bins dominate."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import compress
+
+from .common import emit, load_inputs
+from .fig3_eb_sweep import SWEEP
+
+
+def run(inputs=None):
+    inputs = inputs or load_inputs()
+    rows = []
+    fracs = []
+    for eb in SWEEP:
+        sub_fracs = []
+        for name, x in inputs.items():
+            _, stats = compress(x, eb, "noa", return_stats=True)
+            tot = stats.bin_bytes + stats.subbin_bytes
+            sub_fracs.append(stats.subbin_bytes / tot)
+        f = float(np.mean(sub_fracs))
+        fracs.append(f)
+        rows.append((f"fig4/eb{eb:g}", 0.0,
+                     f"subbin_frac={f:.3f} bin_frac={1-f:.3f}"))
+    assert fracs[0] > 0.5, "loose bound: subbins must dominate"
+    assert fracs[-1] < 0.3, "tight bound: bins must dominate"
+    assert all(a >= b - 0.05 for a, b in zip(fracs, fracs[1:])), \
+        "subbin fraction decreases (roughly monotonically) with the bound"
+    emit(rows, "Fig. 4 — bin/subbin stream split")
+    return rows

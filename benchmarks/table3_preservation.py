@@ -1,0 +1,33 @@
+"""Paper Table III: critical-point false positives / negatives / types.
+
+Headline reproduction: LOPC must be 0/0/0 on every input at every bound;
+the non-topology baselines must not be."""
+from __future__ import annotations
+
+from repro.tda import critical_point_errors, local_order_violations
+
+from .common import EBS, emit, load_inputs, run_baseline, run_lopc
+
+
+def run(inputs=None):
+    inputs = inputs or load_inputs()
+    rows = []
+    ok = True
+    for eb in EBS:
+        for name, x in inputs.items():
+            for codec, runner in (
+                ("lopc", lambda x=x, eb=eb: run_lopc(x, eb, repeats=1)),
+                ("pfpl_lite", lambda x=x, eb=eb: run_baseline(x, eb, "pfpl_lite", repeats=1)),
+                ("sz_lorenzo", lambda x=x, eb=eb: run_baseline(x, eb, "sz_lorenzo", repeats=1)),
+                ("topoqz_lite", lambda x=x, eb=eb: run_baseline(x, eb, "topoqz_lite", repeats=1)),
+            ):
+                res = runner()
+                fp, fn, ft = critical_point_errors(x, res.decoded)
+                viol = local_order_violations(x, res.decoded)
+                rows.append((f"table3/{codec}/{name}/eb{eb:g}", res.comp_s,
+                             f"{fp}/{fn}/{ft} viol={viol}"))
+                if codec == "lopc" and (fp or fn or ft or viol):
+                    ok = False
+    emit(rows, "Table III — critical point preservation (FP/FN/FT)")
+    assert ok, "LOPC must preserve all critical points (0/0/0)"
+    return rows

@@ -1,0 +1,34 @@
+"""Paper Tables IV/V: LOPC vs topology-preserving compressors — ratio,
+compression + decompression throughput at NOA 1e-2 / 1e-4.
+
+LOPC solver columns here: jacobi (the paper's synchronous baseline,
+'Ser/OMP' analogue) and blockwise (the TPU worklist analogue, 'CUDA'
+column analogue). TopoQZ-lite is the topology-aware comparator."""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import EBS, emit, load_inputs, run_baseline, run_lopc
+
+
+def run(inputs=None):
+    inputs = inputs or load_inputs()
+    rows = []
+    for eb in EBS:
+        ratios = {"jacobi": [], "blockwise": [], "topoqz_lite": []}
+        for name, x in inputs.items():
+            for solver in ("jacobi", "blockwise"):
+                r = run_lopc(x, eb, solver=solver, name=f"lopc-{solver}")
+                rows.append((f"table45/lopc-{solver}/{name}/eb{eb:g}", r.comp_s,
+                             f"ratio={r.ratio:.2f} comp={r.comp_mbps:.1f}MB/s "
+                             f"decomp={r.decomp_mbps:.1f}MB/s"))
+                ratios[solver].append(r.ratio)
+            t = run_baseline(x, eb, "topoqz_lite")
+            rows.append((f"table45/topoqz_lite/{name}/eb{eb:g}", t.comp_s,
+                         f"ratio={t.ratio:.2f} comp={t.comp_mbps:.1f}MB/s"))
+            ratios["topoqz_lite"].append(t.ratio)
+        for k, v in ratios.items():
+            rows.append((f"table45/geomean/{k}/eb{eb:g}", 0.0,
+                         f"ratio={float(np.exp(np.mean(np.log(v)))):.2f}"))
+    emit(rows, "Tables IV/V — topology-preserving comparison")
+    return rows

@@ -1,0 +1,31 @@
+"""Paper Tables VI/VII: LOPC vs non-topology compressors (SZ-Lorenzo,
+PFPL-lite lossy; lossless-FP, zstd).  Expected qualitative structure:
+lossy-non-topo > LOPC > lossless on ratio; LOPC decompression much
+faster than its compression (paper §VI-C)."""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import EBS, emit, load_inputs, run_baseline, run_lopc
+
+
+def run(inputs=None):
+    inputs = inputs or load_inputs()
+    rows = []
+    geo = {}
+    for eb in EBS:
+        for name, x in inputs.items():
+            r = run_lopc(x, eb)
+            entries = [("lopc", r.ratio, r.comp_s, r.comp_mbps, r.decomp_mbps)]
+            for which in ("sz_lorenzo", "pfpl_lite", "lossless_fp", "zstd"):
+                b = run_baseline(x, eb, which)
+                entries.append((which, b.ratio, b.comp_s, b.comp_mbps, b.decomp_mbps))
+            for codec, ratio, s, cmb, dmb in entries:
+                geo.setdefault((eb, codec), []).append(ratio)
+                rows.append((f"table67/{codec}/{name}/eb{eb:g}", s,
+                             f"ratio={ratio:.2f} comp={cmb:.1f}MB/s decomp={dmb:.1f}MB/s"))
+    for (eb, codec), v in geo.items():
+        rows.append((f"table67/geomean/{codec}/eb{eb:g}", 0.0,
+                     f"ratio={float(np.exp(np.mean(np.log(v)))):.2f}"))
+    emit(rows, "Tables VI/VII — non-topology comparison")
+    return rows

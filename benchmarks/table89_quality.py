@@ -1,0 +1,31 @@
+"""Paper Tables VIII/IX: PSNR / SSIM of reconstructions at both bounds.
+Expected: LOPC slightly below the plain quantizer (it moves values
+inside bins to restore order) but close; both high at 1e-4."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.tda import psnr, ssim
+
+from .common import EBS, emit, load_inputs, run_baseline, run_lopc
+
+
+def run(inputs=None):
+    inputs = inputs or load_inputs()
+    rows = []
+    for eb in EBS:
+        ps = {"lopc": [], "pfpl_lite": []}
+        for name, x in inputs.items():
+            r = run_lopc(x, eb)
+            b = run_baseline(x, eb, "pfpl_lite")
+            for codec, res in (("lopc", r), ("pfpl_lite", b)):
+                p = psnr(x, res.decoded)
+                s = ssim(x, res.decoded)
+                ps[codec].append(p)
+                rows.append((f"table89/{codec}/{name}/eb{eb:g}", 0.0,
+                             f"psnr={p:.1f} ssim={s:.4f}"))
+        rows.append((f"table89/mean_psnr/eb{eb:g}", 0.0,
+                     f"lopc={np.mean(ps['lopc']):.1f} "
+                     f"pfpl={np.mean(ps['pfpl_lite']):.1f}"))
+    emit(rows, "Tables VIII/IX — PSNR / SSIM")
+    return rows

@@ -1,0 +1,51 @@
+"""The paper's own deployment scenario: a simulation emitting timesteps
+faster than storage can absorb them.  LOPC compresses each step with a
+guaranteed bound while preserving every critical point, so downstream
+topological analysis (feature tracking across timesteps) stays exact.
+
+    PYTHONPATH=src python examples/scientific_pipeline.py
+"""
+import time
+
+import numpy as np
+
+from repro.core import compress, decompress
+from repro.data.fields import make_scientific_field
+from repro.tda import classify_critical_points
+
+TIMESTEPS = 4
+
+
+def simulate(step: int) -> np.ndarray:
+    """Stand-in for a running simulation (evolving turbulence field)."""
+    return make_scientific_field("isabel", seed=step)
+
+
+def main():
+    total_raw = total_stored = 0
+    t0 = time.perf_counter()
+    census_series = []
+    for step in range(TIMESTEPS):
+        field = simulate(step)
+        blob, stats = compress(field, eb=1e-2, mode="noa", return_stats=True)
+        total_raw += stats.raw_bytes
+        total_stored += stats.total_bytes
+
+        # downstream analysis on the archived (decompressed) data:
+        y = decompress(blob)
+        cls = np.asarray(classify_critical_points(y))
+        census = {int(c): int((cls == c).sum()) for c in (1, 2, 3)}
+        cls_orig = np.asarray(classify_critical_points(field))
+        assert np.array_equal(cls, cls_orig), "topology must survive the archive"
+        census_series.append(census)
+        print(f"t={step}: {stats.ratio:.2f}x, critical points "
+              f"min/max/saddle = {census[1]}/{census[2]}/{census[3]} "
+              f"(identical to the live field)")
+    dt = time.perf_counter() - t0
+    print(f"archived {total_raw / 1e6:.1f} MB as {total_stored / 1e6:.1f} MB "
+          f"({total_raw / total_stored:.2f}x) at "
+          f"{total_raw / 1e6 / dt:.1f} MB/s end-to-end")
+
+
+if __name__ == "__main__":
+    main()

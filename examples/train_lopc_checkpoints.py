@@ -1,0 +1,78 @@
+"""End-to-end training driver: a ~100M-parameter qwen2.5-family model
+with the full fault-tolerance stack — LOPC-compressed checkpoints,
+resume-exactly semantics, straggler logging, optional int8+error-feedback
+gradient compression.
+
+    PYTHONPATH=src python examples/train_lopc_checkpoints.py --steps 30
+    PYTHONPATH=src python examples/train_lopc_checkpoints.py --steps 300 \
+        --d-model 768 --layers 12     # the full ~100M run
+
+Kill it mid-run and start it again: it resumes from the last atomic
+checkpoint with bit-exact state and a deterministic data stream.
+"""
+import argparse
+
+import jax
+
+from repro.models import get_arch
+from repro.runtime.trainer import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--d-model", type=int, default=256)
+    ap.add_argument("--layers", type=int, default=4)
+    ap.add_argument("--vocab", type=int, default=8192)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_example")
+    ap.add_argument("--grad-compression", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_arch("qwen2.5-3b").config.scaled(
+        n_layers=args.layers,
+        d_model=args.d_model,
+        n_heads=max(4, args.d_model // 64),
+        n_kv_heads=max(2, args.d_model // 128),
+        head_dim=64,
+        d_ff=args.d_model * 4,
+        vocab=args.vocab,
+    )
+    n_params = sum(
+        int(x.size) for x in jax.tree.leaves(
+            jax.eval_shape(lambda k: __import__("repro.models.model",
+                                                fromlist=["init_params"])
+                           .init_params(cfg, k), jax.random.PRNGKey(0))
+        )
+    )
+    print(f"model: {n_params / 1e6:.1f}M params")
+
+    tc = TrainerConfig(
+        total_steps=args.steps,
+        ckpt_every=max(5, args.steps // 5),
+        ckpt_dir=args.ckpt_dir,
+        global_batch=args.batch,
+        seq_len=args.seq,
+        base_lr=1e-3,
+        grad_compression=args.grad_compression,
+        metrics_path=args.ckpt_dir + ".metrics.jsonl",
+    )
+    trainer = Trainer(cfg, tc,
+                      on_straggler=lambda s, dt: print(f"straggler: step {s} "
+                                                       f"took {dt:.2f}s"))
+    trainer.run(jax.random.PRNGKey(0))
+    losses = trainer.state.losses
+    if losses:
+        print(f"steps {trainer.state.step} | first losses "
+              f"{[round(v, 3) for v in losses[:3]]} -> last "
+              f"{[round(v, 3) for v in losses[-3:]]}")
+    m = trainer.ckpt.last_manifest
+    if m:
+        print(f"last checkpoint: {m['raw_bytes'] / 1e6:.1f} MB raw -> "
+              f"{m['stored_bytes'] / 1e6:.1f} MB stored "
+              f"({m['raw_bytes'] / max(m['stored_bytes'], 1):.2f}x)")
+
+
+if __name__ == "__main__":
+    main()

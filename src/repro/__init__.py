@@ -1,0 +1,19 @@
+"""repro — production JAX framework built around LOPC.
+
+LOPC (Local-Order-Preserving Compressor) is an error-bounded lossy
+compressor for scalar fields that fully preserves local order and therefore
+all critical points (Fallin et al., CS.DC 2026).
+
+This package enables 64-bit JAX globally: the paper's evaluation is
+dominated by double-precision inputs, and the compressor's binning math
+must run in f64. All model/framework code uses explicit dtypes
+(bfloat16/float32/int32) so the flag never changes LM numerics; smoke
+tests assert this.
+"""
+from __future__ import annotations
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+__version__ = "1.0.0"

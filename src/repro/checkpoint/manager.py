@@ -1,0 +1,220 @@
+"""LOPC-compressed, fault-tolerant checkpointing (brief: deliverable of
+the fault-tolerance substrate; LOPC integrated as a first-class codec).
+
+Layout:
+    <dir>/step_<N>/manifest.json     tree structure, codecs, checksums
+    <dir>/step_<N>/leaf_<i>.bin      per-leaf payload
+    <dir>/LATEST                     atomic pointer (text, step number)
+
+Codecs per leaf (chosen automatically, override via `codec`):
+    lopc-lossless : ordered-int delta+BIT+RZE pipeline (f32/f64, exact)
+    lopc-lossy    : guaranteed |err|<=eb quantization + PFPL pipeline
+                    (optimizer moments / weights when eb is supplied)
+    raw           : verbatim bytes (ints, bf16, small leaves)
+
+Fault tolerance properties:
+  * atomic publish: write to step_<N>.tmp-<pid>, fsync, rename; LATEST
+    updated last via atomic replace. Readers never see partial state.
+  * every leaf carries a crc32; restore verifies.
+  * async mode: device->host transfer is synchronous (cheap), the
+    serialize+write happens on a background thread; wait() joins.
+  * retention: keep the most recent `keep` checkpoints.
+  * elastic restore: leaves are stored unsharded (gathered); restoring
+    onto ANY mesh re-shards via jax.device_put with the target sharding
+    (tested on 8 simulated devices with a different mesh shape).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import zlib
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from ..codecs import pipeline as codec_pipeline
+from ..core import bitstream
+from ..core.floatbits import float_to_ordered, ordered_to_float
+from ..core.quantize import bin_dtype_for, dequantize, quantize
+
+import jax.numpy as jnp
+
+
+# ------------------------------------------------------------- leaf codecs
+
+def _encode_leaf(x: np.ndarray, codec: str, eb: float | None):
+    if codec == "raw":
+        return x.tobytes(), {}
+    if codec == "lopc-lossless":
+        ints = float_to_ordered(jnp.asarray(x))
+        return codec_pipeline.encode_bins(ints), {}
+    if codec == "lopc-lossy":
+        assert eb is not None and x.dtype in (np.float32, np.float64)
+        eps = float(eb)
+        bins = quantize(jnp.asarray(x), eps)
+        return codec_pipeline.encode_bins(bins), {"eb": eps}
+    raise ValueError(codec)
+
+
+def _decode_leaf(payload: bytes, codec: str, shape, dtype, extra):
+    n = int(np.prod(shape)) if shape else 1
+    dtype = np.dtype(dtype)
+    if codec == "raw":
+        return np.frombuffer(payload, dtype).reshape(shape).copy()
+    if codec == "lopc-lossless":
+        ints = codec_pipeline.decode_bins(payload, n, shape, bin_dtype_for(dtype))
+        return np.asarray(ordered_to_float(jnp.asarray(ints), dtype))
+    if codec == "lopc-lossy":
+        bins = codec_pipeline.decode_bins(payload, n, shape, bin_dtype_for(dtype))
+        sub = np.zeros(shape, bins.dtype)
+        return np.asarray(dequantize(jnp.asarray(bins), jnp.asarray(sub),
+                                     extra["eb"], dtype))
+    raise ValueError(codec)
+
+
+def _auto_codec(x: np.ndarray, eb: float | None) -> str:
+    if x.dtype in (np.float32, np.float64) and x.size >= 1024:
+        return "lopc-lossy" if eb is not None else "lopc-lossless"
+    return "raw"
+
+
+# --------------------------------------------------------------- save/load
+
+def save_tree(tree, directory: str | Path, step: int, eb: float | None = None,
+              codec: str | None = None) -> dict:
+    """Serialize a pytree. Returns the manifest dict (with byte sizes)."""
+    directory = Path(directory)
+    directory.mkdir(parents=True, exist_ok=True)
+    tmp = directory / f"step_{step}.tmp-{os.getpid()}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir()
+
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    paths = jax.tree_util.tree_flatten_with_path(tree)[0]
+    manifest = {"step": step, "treedef": str(treedef), "leaves": [],
+                "raw_bytes": 0, "stored_bytes": 0}
+    for i, ((path, leaf), _) in enumerate(zip(paths, leaves)):
+        x = np.asarray(jax.device_get(leaf))
+        c = codec or _auto_codec(x, eb)
+        if c == "lopc-lossy" and x.dtype not in (np.float32, np.float64):
+            c = "raw"
+        payload, extra = _encode_leaf(x, c, eb)
+        fname = f"leaf_{i}.bin"
+        (tmp / fname).write_bytes(payload)
+        manifest["leaves"].append({
+            "path": jax.tree_util.keystr(path),
+            "file": fname,
+            "codec": c,
+            "shape": list(x.shape),
+            "dtype": x.dtype.name,
+            "crc32": zlib.crc32(payload) & 0xFFFFFFFF,
+            "bytes": len(payload),
+            **extra,
+        })
+        manifest["raw_bytes"] += x.nbytes
+        manifest["stored_bytes"] += len(payload)
+
+    (tmp / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    for f in tmp.iterdir():
+        with open(f, "rb") as fh:
+            os.fsync(fh.fileno())
+    final = directory / f"step_{step}"
+    if final.exists():
+        shutil.rmtree(final)
+    tmp.rename(final)  # atomic publish
+    latest_tmp = directory / "LATEST.tmp"
+    latest_tmp.write_text(str(step))
+    latest_tmp.replace(directory / "LATEST")
+    return manifest
+
+
+def restore_tree(template, directory: str | Path, step: int | None = None,
+                 shardings=None):
+    """Restore into the structure of `template` (pytree of arrays or
+    ShapeDtypeStructs).  `shardings`: optional matching pytree of
+    NamedShardings for elastic placement onto any mesh."""
+    directory = Path(directory)
+    if step is None:
+        step = int((directory / "LATEST").read_text())
+    d = directory / f"step_{step}"
+    manifest = json.loads((d / "manifest.json").read_text())
+
+    leaves, treedef = jax.tree_util.tree_flatten(template)
+    assert len(leaves) == len(manifest["leaves"]), "checkpoint/template mismatch"
+    out = []
+    for i, meta in enumerate(manifest["leaves"]):
+        payload = (d / meta["file"]).read_bytes()
+        if (zlib.crc32(payload) & 0xFFFFFFFF) != meta["crc32"]:
+            raise ValueError(f"corrupt checkpoint leaf {meta['path']}")
+        x = _decode_leaf(payload, meta["codec"], tuple(meta["shape"]),
+                         meta["dtype"], meta)
+        out.append(x)
+    tree = jax.tree_util.tree_unflatten(treedef, out)
+    if shardings is not None:
+        tree = jax.tree.map(lambda x, s: jax.device_put(x, s), tree, shardings)
+    return tree, step
+
+
+def available_steps(directory: str | Path) -> list[int]:
+    directory = Path(directory)
+    if not directory.exists():
+        return []
+    return sorted(
+        int(p.name.split("_")[1]) for p in directory.iterdir()
+        if p.is_dir() and p.name.startswith("step_") and ".tmp" not in p.name
+        and (p / "manifest.json").exists()
+    )
+
+
+class CheckpointManager:
+    """Async + retention wrapper around save_tree/restore_tree."""
+
+    def __init__(self, directory: str | Path, keep: int = 3,
+                 eb: float | None = None, async_save: bool = True):
+        self.directory = Path(directory)
+        self.keep = keep
+        self.eb = eb
+        self.async_save = async_save
+        self._thread: threading.Thread | None = None
+        self.last_manifest: dict | None = None
+
+    def save(self, step: int, tree):
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+
+        def work():
+            self.last_manifest = save_tree(host_tree, self.directory, step,
+                                           eb=self.eb)
+            self._gc()
+
+        self.wait()
+        if self.async_save:
+            self._thread = threading.Thread(target=work, daemon=True)
+            self._thread.start()
+        else:
+            work()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def restore_latest(self, template, shardings=None):
+        steps = available_steps(self.directory)
+        if not steps:
+            return None, None
+        # walk backwards over retained steps if one is corrupt
+        for step in reversed(steps):
+            try:
+                return restore_tree(template, self.directory, step, shardings)
+            except Exception:  # noqa: BLE001
+                continue
+        return None, None
+
+    def _gc(self):
+        steps = available_steps(self.directory)
+        for s in steps[:-self.keep] if self.keep else []:
+            shutil.rmtree(self.directory / f"step_{s}", ignore_errors=True)

@@ -1,0 +1,15 @@
+"""Lossless transform stages + compressor pipelines (paper §IV-C/D).
+
+Device side (JAX, fixed shapes): delta, zigzag, bit-shuffle (BIT_w),
+repeated-zero elimination masks/compaction (RZE_w).
+Host side (numpy, variable length): byte serialization, the final RZE_1
+byte stage, bitmap repeat-elimination.
+"""
+from .transforms import delta_decode, delta_encode, zigzag_decode, zigzag_encode
+from .bitshuffle import bitshuffle, bitunshuffle
+from .rze import rze_decode, rze_encode
+
+__all__ = [
+    "delta_encode", "delta_decode", "zigzag_encode", "zigzag_decode",
+    "bitshuffle", "bitunshuffle", "rze_encode", "rze_decode",
+]

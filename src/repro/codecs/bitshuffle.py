@@ -1,0 +1,79 @@
+"""BIT_w — bit-plane transposition (paper Fig. 1; LC stage BIT).
+
+Groups the first bit of every word in a chunk together, then all second
+bits, etc.  After delta+zigzag most high bit-planes are all-zero, so the
+following RZE stage removes them wholesale.
+
+Words are uint32 (BIT_4, single-precision path) or uint64 (BIT_8,
+double-precision path).  chunk_len must be a multiple of the word width
+so each bit-plane packs into whole words.
+
+The loop below runs over the W bit-planes (W=32/64), keeping the working
+set at O(n_chunks * chunk_len) — the same dataflow the Pallas kernel
+tiles into VMEM.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def bitshuffle(words: jnp.ndarray) -> jnp.ndarray:
+    """(n_chunks, L) uintW -> (n_chunks, L) uintW of transposed bit-planes.
+
+    Output layout: plane b (b = 0 = MSB) occupies words
+    [b*L/W, (b+1)*L/W) of each chunk; bit j of the plane (MSB-first) is
+    bit b of word j.
+    """
+    dt = words.dtype
+    w = dt.itemsize * 8
+    n_chunks, length = words.shape
+    assert length % w == 0, f"chunk_len {length} must be a multiple of {w}"
+    shifts = jnp.arange(w - 1, -1, -1, dtype=dt)  # MSB-first pack weights
+    one = jnp.array(1, dt)
+    planes = []
+    for b in range(w):
+        bit = (words >> jnp.array(w - 1 - b, dt)) & one        # (C, L)
+        grouped = bit.reshape(n_chunks, length // w, w)        # w bits/word
+        planes.append(jnp.sum(grouped << shifts[None, None, :], axis=-1, dtype=dt))
+    return jnp.concatenate(planes, axis=1)
+
+
+def bitunshuffle(shuffled: jnp.ndarray) -> jnp.ndarray:
+    """Inverse of :func:`bitshuffle`."""
+    dt = shuffled.dtype
+    w = dt.itemsize * 8
+    n_chunks, length = shuffled.shape
+    assert length % w == 0
+    shifts = jnp.arange(w - 1, -1, -1, dtype=dt)
+    one = jnp.array(1, dt)
+    words = jnp.zeros((n_chunks, length), dt)
+    per = length // w
+    for b in range(w):
+        plane = shuffled[:, b * per : (b + 1) * per]           # (C, L/W)
+        bits = (plane[:, :, None] >> shifts[None, None, :]) & one
+        words = words | (bits.reshape(n_chunks, length) << jnp.array(w - 1 - b, dt))
+    return words
+
+
+def np_bitshuffle(words: np.ndarray) -> np.ndarray:
+    """Host oracle (numpy), used by tests and host-side codec paths."""
+    dt = words.dtype
+    w = dt.itemsize * 8
+    n_chunks, length = words.shape
+    be = f">u{dt.itemsize}"
+    bits = np.unpackbits(words.astype(be).view(np.uint8).reshape(n_chunks, length, dt.itemsize), axis=-1)
+    bits = bits.reshape(n_chunks, length, w).transpose(0, 2, 1)  # (c, plane, j)
+    packed = np.packbits(bits.reshape(n_chunks, -1), axis=-1)    # (c, L*itemsize)
+    return np.ascontiguousarray(packed).view(be).astype(dt).reshape(n_chunks, length)
+
+
+def np_bitunshuffle(shuffled: np.ndarray) -> np.ndarray:
+    dt = shuffled.dtype
+    w = dt.itemsize * 8
+    n_chunks, length = shuffled.shape
+    be = f">u{dt.itemsize}"
+    bits = np.unpackbits(shuffled.astype(be).view(np.uint8).reshape(n_chunks, -1), axis=-1)
+    bits = bits.reshape(n_chunks, w, length).transpose(0, 2, 1)  # (c, j, bit)
+    packed = np.packbits(bits.reshape(n_chunks, -1), axis=-1)
+    return np.ascontiguousarray(packed).view(be).astype(dt).reshape(n_chunks, length)

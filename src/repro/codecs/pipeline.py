@@ -1,0 +1,92 @@
+"""Compressor pipelines (paper §IV-C).
+
+Bins    (PFPL lossless portion): chunk -> delta -> zigzag -> BIT_w -> RZE_w
+Subbins (LC-generated):          chunk ->                   BIT_w -> RZE_w
+Both end with the host RZE_1 byte stage (applied in bitstream.py when it
+shrinks the stream).
+
+f32 path: 4096-word chunks of uint32 (16 KiB, BIT_4 RZE_4 RZE_1)
+f64 path: 2048-word chunks of uint64 (16 KiB, BIT_8 RZE_8 RZE_1)
+
+Device functions are jitted, fixed-shape, and integer-only — identical
+bits on every backend.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import bitstream
+from .bitshuffle import bitshuffle, bitunshuffle
+from .rze import rze_decode, rze_encode
+from .transforms import chunk, delta_decode, delta_encode, unchunk, zigzag_decode, zigzag_encode
+
+CHUNK_WORDS = {4: 4096, 8: 2048}  # word bytes -> words per 16 KiB chunk
+
+
+def chunk_len_for(dtype) -> int:
+    return CHUNK_WORDS[jnp.dtype(dtype).itemsize]
+
+
+@partial(jax.jit, static_argnames=("chunk_len", "use_delta"))
+def _encode_device(ints: jnp.ndarray, chunk_len: int, use_delta: bool):
+    chunks, n_valid = chunk(ints, chunk_len)
+    if use_delta:
+        chunks = delta_encode(chunks)
+    words = zigzag_encode(chunks) if use_delta else chunks.astype(
+        jnp.dtype(jnp.dtype(chunks.dtype).str.replace("i", "u"))
+    )
+    shuffled = bitshuffle(words)
+    bitmap, packed, counts = rze_encode(shuffled)
+    return bitmap, packed, counts
+
+
+@partial(jax.jit, static_argnames=("n_valid", "shape", "use_delta", "out_dtype"))
+def _decode_device(bitmap, packed, n_valid: int, shape, use_delta: bool, out_dtype):
+    shuffled = rze_decode(bitmap, packed)
+    words = bitunshuffle(shuffled)
+    if use_delta:
+        chunks = delta_decode(zigzag_decode(words))
+    else:
+        chunks = words.astype(out_dtype)
+    return unchunk(chunks.astype(out_dtype), n_valid, shape)
+
+
+def encode_ints(ints: jnp.ndarray, use_delta: bool) -> bytes:
+    """Full pipeline: device transforms + host serialization."""
+    chunk_len = chunk_len_for(ints.dtype)
+    bitmap, packed, counts = _encode_device(ints, chunk_len, use_delta)
+    return bitstream.serialize_rze_section(
+        np.asarray(bitmap), np.asarray(packed), np.asarray(counts)
+    )
+
+
+def decode_ints(payload: bytes, n_valid: int, shape, out_dtype, use_delta: bool) -> np.ndarray:
+    bitmap, packed = bitstream.deserialize_rze_section(payload)
+    out = _decode_device(
+        jnp.asarray(bitmap), jnp.asarray(packed), n_valid, tuple(shape), use_delta,
+        jnp.dtype(out_dtype),
+    )
+    return np.asarray(out)
+
+
+def encode_bins(bins: jnp.ndarray) -> bytes:
+    """PFPL lossless portion (delta + zigzag + BIT + RZE [+ RZE_1])."""
+    return encode_ints(bins, use_delta=True)
+
+
+def decode_bins(payload: bytes, n_valid: int, shape, bin_dtype) -> np.ndarray:
+    return decode_ints(payload, n_valid, shape, bin_dtype, use_delta=True)
+
+
+def encode_subbins(subbins: jnp.ndarray) -> bytes:
+    """LC pipeline BIT_w RZE_w [RZE_1] — no delta (subbins are near-zero
+    already; delta would *create* sign noise)."""
+    return encode_ints(subbins, use_delta=False)
+
+
+def decode_subbins(payload: bytes, n_valid: int, shape, sub_dtype) -> np.ndarray:
+    return decode_ints(payload, n_valid, shape, sub_dtype, use_delta=False)

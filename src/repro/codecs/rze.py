@@ -1,0 +1,92 @@
+"""RZE_w — repeated-zero elimination (paper Fig. 2; LC stage RZE).
+
+Per chunk: a bitmap marks nonzero words; zero words are removed; the
+surviving words are compacted to the front.  The bitmap itself is
+compressed further by the host layer (repeat-word elimination + the
+final byte-granularity RZE_1 stage) in bitstream.py.
+
+Device side everything is fixed-shape: the compacted buffer keeps the
+chunk's full capacity and a per-chunk count says how much is real. The
+host serializer slices by count.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def rze_encode(words: jnp.ndarray):
+    """(C, L) uintW -> (bitmap_words (C, L//W) uintW, packed (C, L), counts (C,)).
+
+    bitmap bit j (MSB-first within each bitmap word) = word j nonzero.
+    packed[c, :counts[c]] = the nonzero words of chunk c, in order.
+    """
+    dt = words.dtype
+    w = dt.itemsize * 8
+    n_chunks, length = words.shape
+    assert length % w == 0
+    nz = words != 0
+    counts = jnp.sum(nz, axis=1).astype(jnp.int32)
+    # Stable compaction: position of word j among nonzeros = exclusive
+    # prefix count; scatter via argsort of (zero-flag, index) is stable.
+    order = jnp.argsort(~nz, axis=1, stable=True)  # nonzeros first, in order
+    packed = jnp.take_along_axis(words, order, axis=1)
+    packed = jnp.where(jnp.arange(length)[None, :] < counts[:, None], packed, 0)
+    # pack bitmap bits into words, MSB-first
+    shifts = jnp.arange(w - 1, -1, -1, dtype=dt)
+    grouped = nz.astype(dt).reshape(n_chunks, length // w, w)
+    bitmap = jnp.sum(grouped << shifts[None, None, :], axis=-1, dtype=dt)
+    return bitmap, packed, counts
+
+
+def rze_decode(bitmap: jnp.ndarray, packed: jnp.ndarray):
+    """Inverse: scatter packed words back to their bitmap positions."""
+    dt = packed.dtype
+    w = dt.itemsize * 8
+    n_chunks, length = packed.shape
+    shifts = jnp.arange(w - 1, -1, -1, dtype=dt)
+    one = jnp.array(1, dt)
+    bits = (bitmap[:, :, None] >> shifts[None, None, :]) & one
+    nz = bits.reshape(n_chunks, length) != 0
+    pos = jnp.cumsum(nz, axis=1) - 1  # index into packed for each nz slot
+    gathered = jnp.take_along_axis(packed, jnp.maximum(pos, 0).astype(jnp.int32), axis=1)
+    return jnp.where(nz, gathered, 0)
+
+
+# ---------------------------------------------------------------- host side
+
+def np_rze_bytes(stream: np.ndarray):
+    """RZE_1: byte-granularity zero elimination on a host byte stream.
+
+    Returns (bitmap_bytes, nonzero_bytes). Used as the final pipeline
+    stage (LC: ... RZE_1) and for bitmap recompression.
+    """
+    stream = np.ascontiguousarray(stream, dtype=np.uint8)
+    nz = stream != 0
+    bitmap = np.packbits(nz)  # MSB-first
+    return bitmap, stream[nz]
+
+
+def np_unrze_bytes(bitmap: np.ndarray, nonzero: np.ndarray, n: int) -> np.ndarray:
+    nz = np.unpackbits(np.ascontiguousarray(bitmap, np.uint8), count=n).astype(bool)
+    out = np.zeros(n, np.uint8)
+    out[nz] = nonzero
+    return out
+
+
+def np_repeat_eliminate(words: np.ndarray):
+    """Repeat-word elimination for bitmap streams (paper: the bitmap "is
+    repeatedly compressed with a similar algorithm that identifies
+    repeating words rather than zero words")."""
+    words = np.ascontiguousarray(words)
+    if words.size == 0:
+        return np.packbits(np.zeros(0, bool)), words
+    keep = np.ones(words.shape[0], bool)
+    keep[1:] = words[1:] != words[:-1]
+    return np.packbits(keep), words[keep]
+
+
+def np_repeat_restore(keepmap: np.ndarray, kept: np.ndarray, n: int, dtype) -> np.ndarray:
+    keep = np.unpackbits(np.ascontiguousarray(keepmap, np.uint8), count=n).astype(bool)
+    idx = np.cumsum(keep) - 1
+    return np.ascontiguousarray(kept, dtype)[idx] if n else np.zeros(0, dtype)

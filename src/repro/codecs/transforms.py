@@ -1,0 +1,60 @@
+"""Elementwise/chunkwise integer transforms.
+
+Chunks are independent (PFPL splits the input into 16 KiB chunks so every
+chunk compresses/decompresses in parallel; we keep that contract — arrays
+here are (n_chunks, chunk_len)).
+
+Sign folding: PFPL converts two's complement to negabinary; we use the
+zigzag map instead — the branch-free 2-op transform
+
+    z(v) = (v << 1) ^ (v >> (W-1))      (arithmetic shift)
+
+which, like negabinary, sends small-magnitude signed values to small
+unsigned codes with all-zero high bits (what BIT/RZE exploit). Documented
+deviation in DESIGN.md §2.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def _unsigned(dtype):
+    return jnp.dtype(jnp.dtype(dtype).str.replace("i", "u"))
+
+
+def delta_encode(x: jnp.ndarray) -> jnp.ndarray:
+    """Per-chunk delta along the last axis; first element kept verbatim."""
+    d = x - jnp.concatenate([jnp.zeros_like(x[..., :1]), x[..., :-1]], axis=-1)
+    return d
+
+
+def delta_decode(d: jnp.ndarray) -> jnp.ndarray:
+    return jnp.cumsum(d, axis=-1, dtype=d.dtype)
+
+
+def zigzag_encode(v: jnp.ndarray) -> jnp.ndarray:
+    """Signed -> small unsigned. Output has the *unsigned* twin dtype."""
+    w = jnp.dtype(v.dtype).itemsize * 8
+    z = (v << 1) ^ (v >> (w - 1))
+    return z.astype(_unsigned(v.dtype))
+
+
+def zigzag_decode(z: jnp.ndarray) -> jnp.ndarray:
+    """Unsigned zigzag code -> signed."""
+    sdt = jnp.dtype(jnp.dtype(z.dtype).str.replace("u", "i"))
+    one = jnp.array(1, z.dtype)
+    return ((z >> 1) ^ (jnp.zeros_like(z) - (z & one))).astype(sdt)
+
+
+def chunk(x: jnp.ndarray, chunk_len: int) -> tuple[jnp.ndarray, int]:
+    """Flatten + zero-pad to (n_chunks, chunk_len). Returns (chunks, n_valid)."""
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    n_chunks = -(-n // chunk_len)
+    pad = n_chunks * chunk_len - n
+    flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(n_chunks, chunk_len), n
+
+
+def unchunk(chunks: jnp.ndarray, n_valid: int, shape) -> jnp.ndarray:
+    return chunks.reshape(-1)[:n_valid].reshape(shape)

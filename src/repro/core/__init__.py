@@ -1,0 +1,5 @@
+# The paper's primary contribution: LOPC — error-bounded lossy compression
+# with full local-order (and hence critical-point) preservation.
+from .lopc import CompressStats, compress, compression_ratio, decompress
+
+__all__ = ["compress", "decompress", "compression_ratio", "CompressStats"]

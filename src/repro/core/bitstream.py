@@ -1,0 +1,209 @@
+"""Host-side byte serialization (the storage layer).
+
+On a real pod this is the host-offload path of the storage DMA: devices
+produce fixed-shape transform outputs (bitmaps, compacted words, counts)
+and the host assembles the variable-length byte stream.  Everything here
+is vectorized numpy — deterministic, byte-stable across platforms
+(little-endian on-disk order).
+
+Container layout (all little-endian):
+
+  [4s magic][u8 version][u8 flags][u8 dtype][u8 ndim][u64 shape*ndim]
+  [u8 eb_mode][f64 eb][f64 eps_abs][u32 crc32 of body]
+
+(The solver sweep count is intentionally NOT serialized: the byte stream
+must be identical across solver schedules — the paper's bit-parity
+guarantee. Sweep counts are diagnostics, reported via CompressStats.)
+  body: sections, each [u8 tag][u64 len][payload]
+
+RZE section payload:
+
+  [u32 n_chunks][u32 chunk_len][u8 word_bytes][u8 final_rze]
+  [u64 bitmap_keepmap_len][keepmap][u64 bitmap_kept_len][kept words]
+  [u64 data_len][nonzero words]          (final_rze=1: the three streams
+                                          above are RZE_1-compressed once
+                                          more at byte granularity)
+"""
+from __future__ import annotations
+
+import struct
+import zlib
+from dataclasses import dataclass
+
+import numpy as np
+
+from ..codecs.rze import (
+    np_repeat_eliminate,
+    np_repeat_restore,
+    np_rze_bytes,
+    np_unrze_bytes,
+)
+
+MAGIC = b"LOPC"
+VERSION = 1
+
+DTYPE_CODES = {np.dtype(np.float32): 0, np.dtype(np.float64): 1}
+CODES_DTYPE = {v: k for k, v in DTYPE_CODES.items()}
+EB_MODES = {"abs": 0, "noa": 1}
+MODES_EB = {v: k for k, v in EB_MODES.items()}
+
+
+class Writer:
+    def __init__(self):
+        self.parts: list[bytes] = []
+
+    def raw(self, b: bytes):
+        self.parts.append(bytes(b))
+
+    def pack(self, fmt: str, *vals):
+        self.parts.append(struct.pack("<" + fmt, *vals))
+
+    def lp(self, b: bytes):  # length-prefixed
+        self.pack("Q", len(b))
+        self.raw(b)
+
+    def getvalue(self) -> bytes:
+        return b"".join(self.parts)
+
+
+class Reader:
+    def __init__(self, buf: bytes, off: int = 0):
+        self.buf = buf
+        self.off = off
+
+    def raw(self, n: int) -> bytes:
+        b = self.buf[self.off : self.off + n]
+        if len(b) != n:
+            raise ValueError("truncated stream")
+        self.off += n
+        return b
+
+    def unpack(self, fmt: str):
+        size = struct.calcsize("<" + fmt)
+        vals = struct.unpack("<" + fmt, self.raw(size))
+        return vals if len(vals) > 1 else vals[0]
+
+    def lp(self) -> bytes:
+        return self.raw(self.unpack("Q"))
+
+
+# ------------------------------------------------------------- RZE section
+
+def _maybe_final_rze(stream: bytes) -> tuple[int, bytes]:
+    """Apply the byte-granularity RZE_1 stage if it shrinks the stream."""
+    arr = np.frombuffer(stream, np.uint8)
+    bitmap, nz = np_rze_bytes(arr)
+    w = Writer()
+    w.pack("Q", arr.size)
+    w.lp(bitmap.tobytes())
+    w.raw(nz.tobytes())
+    packed = w.getvalue()
+    if len(packed) < len(stream):
+        return 1, packed
+    return 0, stream
+
+
+def _undo_final_rze(flag: int, payload: bytes) -> bytes:
+    if not flag:
+        return payload
+    r = Reader(payload)
+    n = r.unpack("Q")
+    bitmap = np.frombuffer(r.lp(), np.uint8)
+    nz = np.frombuffer(r.raw(len(payload) - r.off), np.uint8)
+    return np_unrze_bytes(bitmap, nz, n).tobytes()
+
+
+def serialize_rze_section(bitmap: np.ndarray, packed: np.ndarray, counts: np.ndarray) -> bytes:
+    """Serialize device RZE output. counts are NOT stored (recomputed
+    from the bitmap popcount on decode)."""
+    n_chunks, chunk_len = packed.shape
+    word = packed.dtype.itemsize
+    # variable-length nonzero words per chunk
+    mask = np.arange(chunk_len)[None, :] < np.asarray(counts)[:, None]
+    data = np.ascontiguousarray(packed)[mask]
+    keepmap, kept = np_repeat_eliminate(np.ascontiguousarray(bitmap).reshape(-1))
+    inner = Writer()
+    inner.lp(keepmap.tobytes())
+    inner.lp(kept.tobytes())
+    inner.lp(data.tobytes())
+    flag, payload = _maybe_final_rze(inner.getvalue())
+    w = Writer()
+    w.pack("IIBB", n_chunks, chunk_len, word, flag)
+    w.raw(payload)
+    return w.getvalue()
+
+
+def deserialize_rze_section(buf: bytes):
+    """-> (bitmap (C, L//W) uintW, packed (C, L) uintW) zero-padded."""
+    r = Reader(buf)
+    n_chunks, chunk_len, word, flag = r.unpack("IIBB")
+    dt = np.dtype(f"<u{word}")
+    w = word * 8
+    payload = _undo_final_rze(flag, buf[r.off :])
+    r2 = Reader(payload)
+    keepmap = np.frombuffer(r2.lp(), np.uint8)
+    kept = np.frombuffer(r2.lp(), dt)
+    data = np.frombuffer(r2.lp(), dt)
+    n_bitmap_words = n_chunks * (chunk_len // w)
+    bitmap = np_repeat_restore(keepmap, kept, n_bitmap_words, dt).reshape(
+        n_chunks, chunk_len // w
+    )
+    # counts from popcount of bitmap rows
+    bits = np.unpackbits(bitmap.astype(f">u{word}").view(np.uint8).reshape(n_chunks, -1), axis=1)
+    counts = bits.sum(axis=1)
+    packed = np.zeros((n_chunks, chunk_len), dt)
+    mask = np.arange(chunk_len)[None, :] < counts[:, None]
+    packed[mask] = data
+    return bitmap.astype(dt), packed
+
+
+# ------------------------------------------------------------- container
+
+@dataclass
+class Header:
+    dtype: np.dtype
+    shape: tuple[int, ...]
+    eb_mode: str
+    eb: float
+    eps_abs: float
+    flags: int = 0
+
+
+def write_container(header: Header, sections: dict[int, bytes]) -> bytes:
+    body = Writer()
+    for tag, payload in sorted(sections.items()):
+        body.pack("BQ", tag, len(payload))
+        body.raw(payload)
+    body_b = body.getvalue()
+    w = Writer()
+    w.raw(MAGIC)
+    w.pack("BBBB", VERSION, header.flags, DTYPE_CODES[np.dtype(header.dtype)], len(header.shape))
+    w.pack("Q" * len(header.shape), *header.shape)
+    w.pack("B", EB_MODES[header.eb_mode])
+    w.pack("dd", header.eb, header.eps_abs)
+    w.pack("I", zlib.crc32(body_b) & 0xFFFFFFFF)
+    w.raw(body_b)
+    return w.getvalue()
+
+
+def read_container(blob: bytes) -> tuple[Header, dict[int, bytes]]:
+    r = Reader(blob)
+    if r.raw(4) != MAGIC:
+        raise ValueError("not an LOPC container")
+    version, flags, dtc, ndim = r.unpack("BBBB")
+    if version != VERSION:
+        raise ValueError(f"unsupported container version {version}")
+    shape = tuple(np.atleast_1d(r.unpack("Q" * ndim)).tolist()) if ndim > 1 else (r.unpack("Q"),)
+    eb_mode = MODES_EB[r.unpack("B")]
+    eb, eps_abs = r.unpack("dd")
+    crc = r.unpack("I")
+    body = blob[r.off :]
+    if (zlib.crc32(body) & 0xFFFFFFFF) != crc:
+        raise ValueError("corrupt LOPC container (crc mismatch)")
+    sections = {}
+    r2 = Reader(body)
+    while r2.off < len(body):
+        tag, n = r2.unpack("BQ")
+        sections[tag] = r2.raw(n)
+    header = Header(CODES_DTYPE[dtc], shape, eb_mode, eb, eps_abs, flags)
+    return header, sections

@@ -1,0 +1,52 @@
+"""Order-preserving float<->int bit mappings.
+
+LOPC's decoder maps subbin ``k`` to the ``k``-th lowest *representable*
+float inside a quantization bin (paper §IV-E).  We realize
+``nextafter^k`` branch-free with the classic monotone bijection between
+IEEE-754 floats and signed integers:
+
+    m(f) =  bits(f)            if bits(f) >= 0   (f >= +0.0)
+            INT_MIN - bits(f)  otherwise         (f <= -0.0)
+
+``m`` is strictly increasing in ``f`` over all finite floats (and maps
+-0.0 and +0.0 both to 0, which is harmless: they compare equal).  Then
+``nextafter^k(f) = m^-1(m(f) + k)`` — pure integer arithmetic, identical
+on every backend, which is what gives LOPC its bit-parity guarantee.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+_INT_DTYPE = {jnp.dtype(jnp.float32): jnp.int32, jnp.dtype(jnp.float64): jnp.int64}
+
+
+def int_dtype_for(dtype) -> jnp.dtype:
+    """Signed integer dtype with the same width as float ``dtype``."""
+    try:
+        return _INT_DTYPE[jnp.dtype(dtype)]
+    except KeyError:  # pragma: no cover - guarded by public API
+        raise ValueError(f"unsupported float dtype {dtype!r}; need float32/float64")
+
+
+def float_to_ordered(x: jnp.ndarray) -> jnp.ndarray:
+    """Monotone bijection: finite floats -> signed ints of equal width."""
+    idt = int_dtype_for(x.dtype)
+    bits = lax.bitcast_convert_type(x, idt)
+    imin = jnp.array(jnp.iinfo(idt).min, idt)
+    return jnp.where(bits >= 0, bits, imin - bits)
+
+
+def ordered_to_float(m: jnp.ndarray, dtype) -> jnp.ndarray:
+    """Inverse of :func:`float_to_ordered`."""
+    idt = int_dtype_for(dtype)
+    m = m.astype(idt)
+    imin = jnp.array(jnp.iinfo(idt).min, idt)
+    bits = jnp.where(m >= 0, m, imin - m)
+    return lax.bitcast_convert_type(bits, jnp.dtype(dtype))
+
+
+def nextafter_k(x: jnp.ndarray, k: jnp.ndarray) -> jnp.ndarray:
+    """The k-th representable float above ``x`` (k >= 0, elementwise)."""
+    idt = int_dtype_for(x.dtype)
+    return ordered_to_float(float_to_ordered(x) + k.astype(idt), x.dtype)

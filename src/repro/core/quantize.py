@@ -1,0 +1,131 @@
+"""SLEEK-adapted guaranteed-bound quantization (paper §IV-A).
+
+LOPC halves the usual 2*eps bin width so the subbin mechanism can move a
+reconstructed value anywhere inside its bin without violating the user's
+point-wise bound:
+
+    bin(x)        = round(x / eps)               (f64 intermediate math)
+    base(b)       = (b - 0.5) * eps              (bottom of bin b)
+    x in bin b  <=>  base(b) <= x < base(b+1)
+
+A *verify-and-correct* pass nudges any bin whose containment check fails
+(floating-point rounding in the division can misplace a value by one
+bin).  This reproduces SLEEK's "no outlier path" property: every finite
+value is representable and the bound holds for every point, which we
+property-test with hypothesis.  ``eps`` is shrunk by 2^-20 relative so
+that the realized bin width (computed in floating point) never exceeds
+the user's bound even after rounding.
+
+Monotonicity of ``bin`` + containment of the decode interval is what the
+subbin solver builds on: cross-bin neighbor order is automatically
+correct, so only same-bin pairs ever need correction.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .floatbits import float_to_ordered, int_dtype_for, ordered_to_float
+
+# Relative shrink applied to the user's bound. Covers the worst-case
+# accumulation of rounding in base(b) across f64 math + cast to f32/f64.
+EPS_SHRINK = 1.0 - 2.0**-20
+
+# f32 fields use i32 bins (PFPL convention); f64 fields use i64 bins.
+_BIN_DTYPE = {jnp.dtype(jnp.float32): jnp.int32, jnp.dtype(jnp.float64): jnp.int64}
+
+
+def bin_dtype_for(dtype) -> jnp.dtype:
+    return _BIN_DTYPE[jnp.dtype(dtype)]
+
+
+def effective_eps(eb_abs: float) -> float:
+    """The internally used (slightly shrunk) absolute bound."""
+    return float(eb_abs) * EPS_SHRINK
+
+
+def abs_bound_from_mode(x, eb: float, mode: str) -> float:
+    """Resolve an ABS or NOA (range-normalized) bound to absolute."""
+    if mode == "abs":
+        return float(eb)
+    if mode == "noa":
+        lo = float(np.min(x))
+        hi = float(np.max(x))
+        rng = hi - lo
+        if rng == 0.0:
+            rng = 1.0  # constant field: any positive eps preserves it
+        return float(eb) * rng
+    raise ValueError(f"unknown error-bound mode {mode!r} (want 'abs'|'noa')")
+
+
+def decode_base(bins: jnp.ndarray, eps: float, dtype) -> jnp.ndarray:
+    """Smallest *representable* dtype value >= (b - 0.5) * eps.
+
+    This is the paper's decode anchor ("subbin 0 decodes to the lowest
+    representable value within the bin", §IV-E).  Using the representable
+    bottom — not a round-to-nearest cast — keeps bin decode intervals
+    disjoint even when eps is smaller than one ulp of the data, so
+    cross-bin order can never collapse.  Monotone in b by construction.
+    """
+    t = (bins.astype(jnp.float64) - 0.5) * jnp.float64(eps)
+    v = t.astype(dtype)
+    if jnp.dtype(dtype) == jnp.float64:
+        return v  # t is already the representable used everywhere
+    # round-to-nearest may land below t: bump one ulp up so v >= t
+    bumped = ordered_to_float(float_to_ordered(v) + jnp.int32(1), dtype)
+    return jnp.where(v.astype(jnp.float64) < t, bumped, v)
+
+
+@partial(jax.jit, static_argnames=("dtype",))
+def _quantize_impl(x: jnp.ndarray, eps: jnp.ndarray, dtype) -> jnp.ndarray:
+    bdt = bin_dtype_for(dtype)
+    xf = x.astype(jnp.float64)
+    b = jnp.round(xf / eps).astype(bdt)
+    # Verify-and-correct: containment in [base(b), base(b+1)) under the
+    # *same* float comparisons the decoder uses. Two passes cover the
+    # worst realizable misplacement (|round error| <= 1 bin).
+    for _ in range(2):
+        too_high = x < decode_base(b, eps, dtype)
+        too_low = x >= decode_base(b + 1, eps, dtype)
+        b = b - too_high.astype(bdt) + too_low.astype(bdt)
+    return b
+
+
+def quantize(x: jnp.ndarray, eps_abs: float) -> jnp.ndarray:
+    """Map values to bins of width ``effective_eps(eps_abs)``.
+
+    Guarantees: monotone in x, and base(b) <= x < base(b+1) exactly
+    (under IEEE comparisons), hence any decode inside the bin is within
+    +-eps_abs of x.
+    """
+    eps = effective_eps(eps_abs)
+    return _quantize_impl(x, jnp.float64(eps), jnp.dtype(x.dtype))
+
+
+@partial(jax.jit, static_argnames=("dtype",))
+def _dequantize_impl(bins, subbins, eps, dtype):
+    base = decode_base(bins, eps, dtype)
+    idt = int_dtype_for(dtype)
+    return ordered_to_float(float_to_ordered(base) + subbins.astype(idt), dtype)
+
+
+def dequantize(bins: jnp.ndarray, subbins: jnp.ndarray, eps_abs: float, dtype) -> jnp.ndarray:
+    """Reconstruct: subbin k -> k-th lowest representable float in the bin."""
+    eps = effective_eps(eps_abs)
+    return _dequantize_impl(bins, subbins, jnp.float64(eps), jnp.dtype(dtype))
+
+
+def check_bin_range(x: np.ndarray, eps_abs: float) -> None:
+    """f32 fields use i32 bins; reject inputs whose bins would overflow."""
+    dtype = jnp.dtype(x.dtype)
+    eps = effective_eps(eps_abs)
+    max_bin = float(np.max(np.abs(np.asarray(x, np.float64)))) / eps
+    limit = float(jnp.iinfo(bin_dtype_for(dtype)).max) * 0.5
+    if max_bin > limit:
+        raise ValueError(
+            f"|x|/eps = {max_bin:.3g} overflows {bin_dtype_for(dtype)} bins; "
+            "use a looser bound or float64 input"
+        )

@@ -1,0 +1,160 @@
+"""The local-order fixed point (paper §IV-B, Algorithms 1-2).
+
+For every same-bin neighbor pair with original SoS order n < p:
+
+    subbin(p) >= subbin(n) + tie      tie = 1 iff idx(n) > idx(p)
+
+The least solution is the longest-path labelling of a 0/1-weighted DAG
+(acyclic because the targeted relations come from the original data), so
+it is *schedule independent* — any sweep order converges to the same
+integers.  That is the property behind the paper's CPU/GPU bit-parity,
+and it lets us replace the GPU worklist/atomicMax machinery with
+TPU-friendly schedules:
+
+- ``jacobi``   : dense synchronous sweeps (one Bellman-Ford relaxation
+                 per sweep).  Converges in (longest chain) sweeps.
+- ``frontier`` : dense sweeps that also track an active mask — the dense
+                 analogue of the paper's worklist.  On TPU the win is
+                 early exit of the while_loop via the cheap scalar
+                 reduction of the frontier, not thread-level sparsity.
+- ``blockwise``: Pallas kernel (kernels/subbin_sweep.py) that iterates a
+                 VMEM tile to *local* convergence per global sweep,
+                 collapsing in-tile chains into one sweep.  Global sweeps
+                 needed ~= chain length / tile extent.
+
+All three produce bit-identical subbins (tested).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import topology
+from .quantize import bin_dtype_for
+
+
+def _relax_once(sub: jnp.ndarray, flags: jnp.ndarray, ndim: int):
+    """One Jacobi sweep. Returns (new_sub, changed_mask)."""
+    offs = topology.offsets(ndim)
+    ties = topology.tie_breaker(ndim)
+    new = sub
+    for k, off in enumerate(offs):
+        nsub = topology.shift(sub, off, 0)
+        need = topology.flags_to_bit(flags, k).astype(jnp.bool_)
+        cand = nsub + np.int32(ties[k]).astype(sub.dtype)
+        new = jnp.maximum(new, jnp.where(need, cand, 0))
+    return new, new != sub
+
+
+@partial(jax.jit, static_argnames=("method", "subbin_dtype"))
+def solve_from_flags(
+    flags: jnp.ndarray,
+    subbin_dtype: jnp.dtype,
+    max_iters: jnp.ndarray,
+    method: str = "jacobi",
+):
+    """Iterate to the least fixed point. Returns (subbins, n_sweeps)."""
+    ndim = flags.ndim
+    sub0 = jnp.zeros(flags.shape, subbin_dtype)
+
+    if method == "jacobi":
+
+        def cond(c):
+            _, changed, it = c
+            return changed & (it < max_iters)
+
+        def body(c):
+            sub, _, it = c
+            new, ch = _relax_once(sub, flags, ndim)
+            return new, jnp.any(ch), it + 1
+
+        # Prime with one sweep so `changed` starts meaningfully.
+        sub1, ch1 = _relax_once(sub0, flags, ndim)
+        sub, _, iters = jax.lax.while_loop(cond, body, (sub1, jnp.any(ch1), jnp.int64(1)))
+        return sub, iters
+
+    if method == "frontier":
+        # Paper's worklist, dense form: a point is active if any of its
+        # *less-than* neighbors changed last sweep (they are the points
+        # whose constraints may now be violated = the "greater same-bin
+        # neighbors" pushed on worklist2 in Algorithm 2 line 9).
+        offs = topology.offsets(ndim)
+
+        def scatter_active(changed):
+            act = jnp.zeros_like(changed)
+            for k, off in enumerate(offs):
+                # p is affected if its neighbor at offset k changed and
+                # that neighbor is flagged less-than (bit k of p's flags).
+                moved = topology.shift(changed, off, False)
+                act = act | (moved & topology.flags_to_bit(flags, k).astype(jnp.bool_))
+            return act
+
+        def cond(c):
+            _, active, it = c
+            return jnp.any(active) & (it < max_iters)
+
+        def body(c):
+            sub, active, it = c
+            new, ch = _relax_once(sub, flags, ndim)
+            ch = ch & active  # only trust activations (identical result; bounds work)
+            new = jnp.where(active, new, sub)
+            return new, scatter_active(ch), it + 1
+
+        sub1, ch1 = _relax_once(sub0, flags, ndim)
+        sub, _, iters = jax.lax.while_loop(
+            cond, body, (sub1, scatter_active(ch1), jnp.int64(1))
+        )
+        return sub, iters
+
+    raise ValueError(f"unknown solver method {method!r}")
+
+
+def solve_subbins(
+    bins: jnp.ndarray,
+    values: jnp.ndarray,
+    method: str = "auto",
+    max_iters: int | None = None,
+):
+    """Compute flags from (bins, original values) and solve.
+
+    Returns (subbins, n_sweeps). ``max_iters`` defaults to the paper's
+    termination bound: a chain cannot exceed the point count, and each
+    synchronous sweep advances every unsatisfied chain by >= 1.
+    """
+    if method == "auto":
+        method = "jacobi"
+    if method == "blockwise":
+        from repro.kernels import ops as kops  # lazy: pallas import
+
+        return kops.solve_subbins_blockwise(bins, values)
+    flags = topology.order_flags(bins, values)
+    if max_iters is None:
+        max_iters = int(np.prod(bins.shape)) + 2
+    sub_dt = jnp.int32 if bins.dtype == jnp.int32 else jnp.int64
+    return solve_from_flags(flags, sub_dt, jnp.int64(max_iters), method=method)
+
+
+def verify_no_violation(bins, values, subbins) -> jnp.ndarray:
+    """True iff every same-bin constraint is satisfied (test helper)."""
+    flags = topology.order_flags(bins, values)
+    ndim = bins.ndim
+    offs = topology.offsets(ndim)
+    ties = topology.tie_breaker(ndim)
+    ok = jnp.array(True)
+    for k, off in enumerate(offs):
+        need = topology.flags_to_bit(flags, k).astype(jnp.bool_)
+        nsub = topology.shift(subbins, off, 0)
+        ok = ok & jnp.all(jnp.where(need, subbins >= nsub + int(ties[k]), True))
+    return ok
+
+
+def encode_field(x: jnp.ndarray, eps_abs: float, method: str = "auto"):
+    """quantize + solve: returns (bins, subbins, n_sweeps)."""
+    from .quantize import quantize
+
+    bins = quantize(x, eps_abs)
+    sub, iters = solve_subbins(bins, x, method=method)
+    return bins, sub, iters

@@ -1,0 +1,138 @@
+"""Freudenthal mesh topology on regular grids (paper §II).
+
+LOPC subdivides regular 2D/3D grids into triangular/tetrahedral meshes
+the standard way (Freudenthal / Kuhn subdivision, as in TTK and the
+paper's reference [37]).  The link of a vertex is then the fixed
+neighborhood
+
+    ndim=1:  2 neighbors   (+-1)
+    ndim=2:  6 neighbors   (offsets with all components in {0,1} or {0,-1})
+    ndim=3: 14 neighbors   (same rule in 3D)
+
+Two link vertices u, v are adjacent in the link iff (u - v) is itself a
+valid Freudenthal offset — this gives the exact link graph needed for
+saddle classification.
+
+Simulation of Simplicity (SoS): all comparisons are on the pair
+(value, linear index), so ties never exist.  For a neighbor at offset
+``o`` the index comparison is *constant*: every Freudenthal offset has
+all components of one sign, so sign(linear-index delta) == sign(o).
+
+The per-point order flags are packed into one uint32: bit k set iff the
+neighbor at offset k (a) exists, (b) has the same bin, and (c) is
+SoS-less than the point.  These flags are the ground truth the subbin
+solver enforces (paper Algorithm 1, lines 5-8).
+"""
+from __future__ import annotations
+
+from functools import lru_cache, partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@lru_cache(maxsize=None)
+def offsets(ndim: int) -> np.ndarray:
+    """Freudenthal neighbor offsets, positive offsets first.
+
+    Ordering convention: the first K/2 offsets have all components in
+    {0,1} (linear-index delta > 0), the last K/2 are their negations.
+    """
+    pos = []
+    for mask in range(1, 2**ndim):
+        off = tuple((mask >> (ndim - 1 - d)) & 1 for d in range(ndim))
+        pos.append(off)
+    pos.sort(key=lambda o: (sum(o), o))
+    out = np.array(pos + [tuple(-c for c in o) for o in pos], dtype=np.int64)
+    assert out.shape[0] == 2 * (2**ndim - 1)
+    return out
+
+
+@lru_cache(maxsize=None)
+def n_neighbors(ndim: int) -> int:
+    return offsets(ndim).shape[0]
+
+
+def _is_offset(delta: np.ndarray) -> bool:
+    """Is ``delta`` a valid Freudenthal offset (all comps same sign, not 0)?"""
+    if not delta.any():
+        return False
+    return bool(np.all((delta == 0) | (delta == 1)) or np.all((delta == 0) | (delta == -1)))
+
+
+@lru_cache(maxsize=None)
+def link_adjacency(ndim: int) -> np.ndarray:
+    """(K, K) bool: link vertices u, v adjacent iff u - v is an offset."""
+    offs = offsets(ndim)
+    k = offs.shape[0]
+    adj = np.zeros((k, k), dtype=bool)
+    for i in range(k):
+        for j in range(k):
+            if i != j:
+                adj[i, j] = _is_offset(offs[i] - offs[j])
+    assert (adj == adj.T).all()
+    return adj
+
+
+@lru_cache(maxsize=None)
+def tie_breaker(ndim: int) -> np.ndarray:
+    """(K,) int32: 1 iff the neighbor's linear index is greater (offset > 0).
+
+    Paper Algorithm 2, line 5: when a violating same-bin neighbor has a
+    *higher* index, the point's subbin must exceed the neighbor's by 1
+    (SoS would otherwise order the tie the wrong way).
+    """
+    offs = offsets(ndim)
+    return (offs.sum(axis=1) > 0).astype(np.int32)
+
+
+def shift(x: jnp.ndarray, off, fill) -> jnp.ndarray:
+    """out[p] = x[p + off], with ``fill`` outside the grid.
+
+    Static pad+slice (no gathers): lowers to cheap memory ops on TPU.
+    """
+    pads = []
+    slices = []
+    for o, n in zip(off, x.shape):
+        o = int(o)
+        pads.append((max(0, -o), max(0, o)))
+        slices.append(slice(max(0, o), max(0, o) + n))
+    return jnp.pad(x, pads, constant_values=fill)[tuple(slices)]
+
+
+def neighbor_values(x: jnp.ndarray, fill) -> jnp.ndarray:
+    """Stack of neighbor views, shape (K, *grid)."""
+    offs = offsets(x.ndim)
+    return jnp.stack([shift(x, o, fill) for o in offs])
+
+
+def sos_less(nv: jnp.ndarray, v: jnp.ndarray, k: int, ndim: int) -> jnp.ndarray:
+    """SoS comparison: neighbor (at offset k) < center, ties by index."""
+    neighbor_idx_less = bool(tie_breaker(ndim)[k] == 0)  # negative offset
+    if neighbor_idx_less:
+        return (nv < v) | (nv == v)
+    return nv < v
+
+
+@partial(jax.jit, static_argnames=())
+def order_flags(bins: jnp.ndarray, values: jnp.ndarray) -> jnp.ndarray:
+    """uint32 flags: bit k = neighbor k exists & same bin & SoS-less.
+
+    Boundary is handled by fill values: bins are filled with a sentinel
+    that never equals a real bin, so the same-bin test is False there.
+    """
+    ndim = bins.ndim
+    offs = offsets(ndim)
+    flags = jnp.zeros(bins.shape, jnp.uint32)
+    sentinel = jnp.iinfo(bins.dtype).min  # quantize() never produces imin
+    for k, off in enumerate(offs):
+        nb = shift(bins, off, sentinel)
+        nv = shift(values, off, jnp.inf)
+        bit = (nb == bins) & sos_less(nv, values, k, ndim)
+        flags = flags | (bit.astype(jnp.uint32) << np.uint32(k))
+    return flags
+
+
+def flags_to_bit(flags: jnp.ndarray, k: int) -> jnp.ndarray:
+    return (flags >> np.uint32(k)) & np.uint32(1)

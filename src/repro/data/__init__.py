@@ -1,0 +1,4 @@
+from .fields import FIELD_GENERATORS, make_scientific_field
+from .pipeline import SyntheticLMStream
+
+__all__ = ["make_scientific_field", "FIELD_GENERATORS", "SyntheticLMStream"]

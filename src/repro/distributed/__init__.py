@@ -1,0 +1,13 @@
+from .sharding import (
+    ShardingRules,
+    logical_constraint,
+    set_sharding_rules,
+    sharding_rules,
+)
+
+__all__ = [
+    "ShardingRules",
+    "logical_constraint",
+    "set_sharding_rules",
+    "sharding_rules",
+]

@@ -1,0 +1,87 @@
+"""Logical-axis sharding: model code names axes, the launcher maps them
+to mesh axes (MaxText-style).  Keeps every model mesh-agnostic; smoke
+tests run with no rules installed (constraints become no-ops).
+
+Logical axes used by the zoo:
+  batch      -> DP axes, e.g. ('pod', 'data')
+  seq        -> sequence parallelism at layer boundaries ('model')
+  seq_noshard-> sequence inside attention/FFN (must be unsharded there)
+  heads      -> TP over attention heads ('model')
+  ffn        -> TP over FFN hidden ('model')
+  embed      -> d_model (unsharded in activations)
+  vocab      -> TP over vocabulary ('model')
+  experts    -> EP over MoE experts ('model')
+  fsdp       -> parameter sharding over the DP axis (ZeRO-3)
+"""
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from dataclasses import dataclass, field
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+@dataclass
+class ShardingRules:
+    mesh: Mesh | None = None
+    rules: dict = field(default_factory=dict)
+    # MoE execution plan (see models/moe.py)
+    ep_axis: str | None = None      # mesh axis carrying experts
+    dp_axes: tuple = ()             # mesh axes carrying tokens
+
+    def spec(self, *logical_names) -> P:
+        return P(*(self.rules.get(n) if n is not None else None for n in logical_names))
+
+
+def set_sharding_rules(r: ShardingRules | None):
+    _state.rules = r
+
+
+def sharding_rules() -> ShardingRules | None:
+    return getattr(_state, "rules", None)
+
+
+@contextmanager
+def use_sharding_rules(r: ShardingRules | None):
+    prev = sharding_rules()
+    set_sharding_rules(r)
+    try:
+        yield
+    finally:
+        set_sharding_rules(prev)
+
+
+def _axis_size(mesh, entry) -> int:
+    if entry is None:
+        return 1
+    names = entry if isinstance(entry, tuple) else (entry,)
+    size = 1
+    for n in names:
+        size *= mesh.shape[n]
+    return size
+
+
+def drop_nondivisible(mesh, spec: P, shape) -> P:
+    """Replace spec entries that do not divide the dim with None.
+
+    Keeps model code robust across arch extremes (vocab 122753 is odd;
+    decode seq dims are 1; kv heads can be < |model|)."""
+    out = []
+    for dim, entry in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        size = _axis_size(mesh, entry)
+        out.append(entry if size > 1 and dim % size == 0 else None)
+    return P(*out)
+
+
+def logical_constraint(x, *logical_names):
+    """with_sharding_constraint through the installed rules (no-op when
+    no rules / no mesh are installed)."""
+    r = sharding_rules()
+    if r is None or r.mesh is None:
+        return x
+    spec = drop_nondivisible(r.mesh, r.spec(*logical_names), x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(r.mesh, spec))

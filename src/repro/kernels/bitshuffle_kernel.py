@@ -1,0 +1,69 @@
+"""Pallas TPU kernel: BIT_4 bit-plane transposition (paper Fig. 1).
+
+Each grid step transposes a band of whole 4096-word chunks held in VMEM.
+The 32 plane extractions are unrolled VPU shift/mask/weighted-reduce ops;
+the (8, 128)-aligned reshape (4096 = 32 x 128) keeps every intermediate
+on hardware tile boundaries.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+CHUNK = 4096        # uint32 words per chunk (16 KiB, PFPL/LC convention)
+BLOCK_CHUNKS = 4    # chunks per grid step: 4 x 16 KiB in + out in VMEM
+WORD_BITS = 32
+
+
+def _bitshuffle_kernel(x_ref, out_ref):
+    x = x_ref[...]  # (B, CHUNK) uint32
+    nb, length = x.shape
+    per = length // WORD_BITS
+    iota = jax.lax.broadcasted_iota(jnp.uint32, (WORD_BITS,), 0)
+    shifts = jnp.uint32(WORD_BITS - 1) - iota
+    one = jnp.uint32(1)
+    for b in range(WORD_BITS):
+        bit = (x >> jnp.uint32(WORD_BITS - 1 - b)) & one
+        grouped = bit.reshape(nb, per, WORD_BITS)
+        plane = jnp.sum(grouped << shifts[None, None, :], axis=-1, dtype=jnp.uint32)
+        out_ref[:, b * per : (b + 1) * per] = plane
+
+
+def _bitunshuffle_kernel(x_ref, out_ref):
+    x = x_ref[...]
+    nb, length = x.shape
+    per = length // WORD_BITS
+    iota = jax.lax.broadcasted_iota(jnp.uint32, (WORD_BITS,), 0)
+    shifts = jnp.uint32(WORD_BITS - 1) - iota
+    one = jnp.uint32(1)
+    acc = jnp.zeros((nb, length), jnp.uint32)
+    for b in range(WORD_BITS):
+        plane = x[:, b * per : (b + 1) * per]
+        bits = (plane[:, :, None] >> shifts[None, None, :]) & one
+        acc = acc | (bits.reshape(nb, length) << jnp.uint32(WORD_BITS - 1 - b))
+    out_ref[...] = acc
+
+
+def _call(kernel, words: jnp.ndarray, interpret: bool):
+    n_chunks, length = words.shape
+    assert length == CHUNK and words.dtype == jnp.uint32
+    assert n_chunks % BLOCK_CHUNKS == 0
+    grid = (n_chunks // BLOCK_CHUNKS,)
+    spec = pl.BlockSpec((BLOCK_CHUNKS, CHUNK), lambda i: (i, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((n_chunks, CHUNK), jnp.uint32),
+        interpret=interpret,
+    )(words)
+
+
+def bitshuffle_u32(words: jnp.ndarray, interpret: bool = False):
+    return _call(_bitshuffle_kernel, words, interpret)
+
+
+def bitunshuffle_u32(words: jnp.ndarray, interpret: bool = False):
+    return _call(_bitunshuffle_kernel, words, interpret)

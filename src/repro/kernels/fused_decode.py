@@ -1,0 +1,47 @@
+"""Pallas TPU kernel: fused LOPC decode (paper §IV-D "embarrassingly
+parallel" decompression path).
+
+reconstruct = k-th representable float above base(bin), k = subbin —
+realized as ordered-int bit arithmetic (core/floatbits.py) fused with the
+base computation into a single VPU pass.  FF32 contract (ref.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+LANE = 128
+BLOCK_ROWS = 256
+
+
+def _decode_kernel(eps_ref, bins_ref, sub_ref, out_ref):
+    eps = eps_ref[0]
+    b = bins_ref[...]
+    s = sub_ref[...]
+    base = (b.astype(jnp.float32) - jnp.float32(0.5)) * eps
+    bits = lax.bitcast_convert_type(base, jnp.int32)
+    imin = jnp.int32(np.iinfo(np.int32).min)
+    m = jnp.where(bits >= 0, bits, imin - bits) + s
+    out_bits = jnp.where(m >= 0, m, imin - m)
+    out_ref[...] = lax.bitcast_convert_type(out_bits, jnp.float32)
+
+
+def dequantize_ff32(bins2d, sub2d, eps32, interpret: bool = False):
+    """(R, 128) int32 bins + subbins -> f32 reconstruction."""
+    rows = bins2d.shape[0]
+    assert bins2d.shape == sub2d.shape and bins2d.shape[1] == LANE
+    assert rows % BLOCK_ROWS == 0
+    grid = (rows // BLOCK_ROWS,)
+    spec = pl.BlockSpec((BLOCK_ROWS, LANE), lambda i: (i, 0))
+    return pl.pallas_call(
+        _decode_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec(memory_space=pltpu.SMEM), spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((rows, LANE), jnp.float32),
+        interpret=interpret,
+    )(eps32.reshape(1).astype(jnp.float32), bins2d, sub2d)

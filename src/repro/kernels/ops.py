@@ -1,0 +1,89 @@
+"""Jitted public wrappers around the Pallas kernels.
+
+Backend dispatch: on TPU the kernels lower natively via Mosaic; on this
+CPU container they execute in interpret mode (the kernel body runs
+op-for-op, which is what the per-kernel allclose tests validate against
+ref.py).  All kernels are integer/f32 exact — tests use strict equality,
+not tolerances.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import topology
+
+from . import bitshuffle_kernel, fused_decode, quantize_kernel, rze_kernel, subbin_sweep
+from .ref import FF32_MAX_BIN, canonical3d
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _to_rows(x: jnp.ndarray, block_rows: int, lane: int):
+    """Flatten + zero-pad to (R, lane) with R % block_rows == 0."""
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    per = block_rows * lane
+    padded = -(-n // per) * per
+    flat = jnp.pad(flat, (0, padded - n))
+    return flat.reshape(-1, lane), n
+
+
+def quantize_ff32(x: jnp.ndarray, eps32: float) -> jnp.ndarray:
+    """FF32-contract quantization of an f32 array of any shape."""
+    x2d, n = _to_rows(x.astype(jnp.float32), quantize_kernel.BLOCK_ROWS, quantize_kernel.LANE)
+    bins = quantize_kernel.quantize_ff32(x2d, jnp.float32(eps32), interpret=_interpret())
+    return bins.reshape(-1)[:n].reshape(x.shape)
+
+
+def dequantize_ff32(bins: jnp.ndarray, subbins: jnp.ndarray, eps32: float) -> jnp.ndarray:
+    b2d, n = _to_rows(bins.astype(jnp.int32), fused_decode.BLOCK_ROWS, fused_decode.LANE)
+    s2d, _ = _to_rows(subbins.astype(jnp.int32), fused_decode.BLOCK_ROWS, fused_decode.LANE)
+    out = fused_decode.dequantize_ff32(b2d, s2d, jnp.float32(eps32), interpret=_interpret())
+    return out.reshape(-1)[:n].reshape(bins.shape)
+
+
+def ff32_domain_ok(x: np.ndarray, eps32: float) -> bool:
+    """|bin| < 2^23 validity check for the FF32 contract."""
+    return float(np.max(np.abs(np.asarray(x, np.float64)))) / float(eps32) < FF32_MAX_BIN - 2
+
+
+def _pad_chunks(words: jnp.ndarray, block: int):
+    c = words.shape[0]
+    cp = -(-c // block) * block
+    return jnp.pad(words, ((0, cp - c), (0, 0))), c
+
+
+def bitshuffle_u32(words: jnp.ndarray) -> jnp.ndarray:
+    """(C, 4096) uint32 chunks, any C."""
+    w, c = _pad_chunks(words, bitshuffle_kernel.BLOCK_CHUNKS)
+    return bitshuffle_kernel.bitshuffle_u32(w, interpret=_interpret())[:c]
+
+
+def bitunshuffle_u32(words: jnp.ndarray) -> jnp.ndarray:
+    w, c = _pad_chunks(words, bitshuffle_kernel.BLOCK_CHUNKS)
+    return bitshuffle_kernel.bitunshuffle_u32(w, interpret=_interpret())[:c]
+
+
+def rze_bitmap_u32(words: jnp.ndarray):
+    w, c = _pad_chunks(words, rze_kernel.BLOCK_CHUNKS)
+    bitmap, counts = rze_kernel.rze_bitmap_u32(w, interpret=_interpret())
+    return bitmap[:c], counts[:c, 0]
+
+
+def solve_subbins_blockwise(bins: jnp.ndarray, values: jnp.ndarray):
+    """Block-local-convergence solver (paper worklist, TPU form).
+
+    Same least fixed point as core.subbin jacobi/frontier — tested
+    bit-identical.  Subbins are computed in int32 (fields < 2^31 points
+    cannot exceed int32 subbin range, §IV-E) and cast to the bin width.
+    """
+    b3 = canonical3d(bins)
+    v3 = canonical3d(values)
+    flags = topology.order_flags(b3, v3)
+    sub, sweeps = subbin_sweep.solve_blockwise(flags, interpret=_interpret())
+    out_dtype = jnp.int32 if bins.dtype == jnp.int32 else jnp.int64
+    return sub.reshape(bins.shape).astype(out_dtype), jnp.int64(sweeps)

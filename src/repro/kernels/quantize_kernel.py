@@ -1,0 +1,48 @@
+"""Pallas TPU kernel: fused guaranteed-bound quantization (FF32 contract).
+
+One VPU pass per tile: multiply-round to a bin, then the SLEEK-style
+verify-and-correct containment fixup — all in f32/int32 (see ref.py for
+the precision contract).  The input is viewed as (rows, 128) with rows
+tiled in VMEM-sized bands; eps lives in SMEM as a scalar prefetch.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+LANE = 128          # TPU minor-dim vector lane width
+BLOCK_ROWS = 256    # (256, 128) f32 tile = 128 KiB in, 128 KiB out
+
+
+def _quantize_kernel(eps_ref, x_ref, out_ref):
+    eps = eps_ref[0]
+    x = x_ref[...]
+    inv = jnp.float32(1.0) / eps
+    b = lax.round(x * inv, lax.RoundingMethod.TO_NEAREST_EVEN).astype(jnp.int32)
+    for _ in range(2):  # verify-and-correct (containment under base())
+        bf = b.astype(jnp.float32)
+        lo = (bf - jnp.float32(0.5)) * eps
+        hi = (bf + jnp.float32(0.5)) * eps
+        b = b - (x < lo).astype(jnp.int32) + (x >= hi).astype(jnp.int32)
+    out_ref[...] = b
+
+
+def quantize_ff32(x2d: jnp.ndarray, eps32: jnp.ndarray, interpret: bool = False):
+    """x2d: (R, 128) f32 with R a multiple of BLOCK_ROWS. -> int32 bins."""
+    rows = x2d.shape[0]
+    assert x2d.shape[1] == LANE and rows % BLOCK_ROWS == 0
+    grid = (rows // BLOCK_ROWS,)
+    return pl.pallas_call(
+        _quantize_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((BLOCK_ROWS, LANE), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_ROWS, LANE), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, LANE), jnp.int32),
+        interpret=interpret,
+    )(eps32.reshape(1).astype(jnp.float32), x2d)

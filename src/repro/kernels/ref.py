@@ -1,0 +1,99 @@
+"""Pure-jnp oracles for every Pallas kernel (the ground truth in tests).
+
+FF32 precision contract
+-----------------------
+TPU v5e has no f64 ALU, so the TPU pipeline cannot reuse core/quantize.py's
+f64 binning math.  LOPC's theorems, however, never need f64 — they need a
+*consistent, monotone* decode-base function with realized bin width
+<= the user bound.  The FF32 contract provides exactly that using only
+f32/int32 ops:
+
+    bin(x)  = rne(x * (1/eps32))                       (f32 multiply)
+    base(b) = (f32(b) - 0.5) * eps32                   (f32 ops)
+    fixup   : b -= [x < base(b)]; b += [x >= base(b+1)]  (twice)
+
+Validity domain: |b| < 2^23 so that (f32(b) +- 0.5) is EXACT, making
+base() monotone with per-bin width eps32*(1 +- 2^-23) — covered by the
+2^-20 bound shrink.  The encoder checks the domain and falls back to the
+f64 path otherwise (ops.py).  Encoder and decoder use the same base(), so
+all preservation theorems carry over verbatim.  Both the Pallas kernels
+and these oracles execute the same IEEE f32 op sequence => bit parity.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.core import topology
+from repro.core.subbin import solve_from_flags
+
+FF32_MAX_BIN = 2**23  # |bin| must stay below this for base() exactness
+
+
+def quantize_ff32_ref(x: jnp.ndarray, eps32: jnp.ndarray) -> jnp.ndarray:
+    """f32-only guaranteed binning (oracle for quantize_kernel)."""
+    x = x.astype(jnp.float32)
+    eps = eps32.astype(jnp.float32)
+    inv = jnp.float32(1.0) / eps
+    b = lax.round(x * inv, lax.RoundingMethod.TO_NEAREST_EVEN).astype(jnp.int32)
+    for _ in range(2):
+        bf = b.astype(jnp.float32)
+        lo = (bf - jnp.float32(0.5)) * eps
+        hi = (bf + jnp.float32(0.5)) * eps
+        b = b - (x < lo).astype(jnp.int32) + (x >= hi).astype(jnp.int32)
+    return b
+
+
+def decode_base_ff32(bins: jnp.ndarray, eps32: jnp.ndarray) -> jnp.ndarray:
+    return (bins.astype(jnp.float32) - jnp.float32(0.5)) * eps32.astype(jnp.float32)
+
+
+def dequantize_ff32_ref(bins: jnp.ndarray, subbins: jnp.ndarray, eps32) -> jnp.ndarray:
+    """Oracle for fused_decode: base + subbin ulp steps, int32 bit math."""
+    base = decode_base_ff32(bins, eps32)
+    bits = lax.bitcast_convert_type(base, jnp.int32)
+    imin = jnp.int32(np.iinfo(np.int32).min)
+    m = jnp.where(bits >= 0, bits, imin - bits)
+    m = m + subbins.astype(jnp.int32)
+    out_bits = jnp.where(m >= 0, m, imin - m)
+    return lax.bitcast_convert_type(out_bits, jnp.float32)
+
+
+def bitshuffle_ref(words: jnp.ndarray) -> jnp.ndarray:
+    from repro.codecs.bitshuffle import bitshuffle
+
+    return bitshuffle(words)
+
+
+def rze_bitmap_ref(words: jnp.ndarray):
+    """Oracle for rze_kernel: (bitmap words, per-chunk nonzero counts)."""
+    from repro.codecs.rze import rze_encode
+
+    bitmap, _, counts = rze_encode(words)
+    return bitmap, counts
+
+
+# ------------------------------------------------------- subbin solver
+
+def canonical3d(x: jnp.ndarray) -> jnp.ndarray:
+    """1D/2D fields viewed as 3D. The Freudenthal 2D (1D) link equals the
+    3D link restricted to in-plane offsets, so flags/fixed point agree."""
+    if x.ndim == 3:
+        return x
+    if x.ndim == 2:
+        return x[:, :, None]
+    return x[:, None, None]
+
+
+def solve_subbins_ref(bins: jnp.ndarray, values: jnp.ndarray):
+    """Jacobi fixed point on the canonical 3D view (oracle for
+    subbin_sweep; must equal core.solve_subbins on the native view)."""
+    b3 = canonical3d(bins)
+    v3 = canonical3d(values)
+    flags = topology.order_flags(b3, v3)
+    sub, iters = solve_from_flags(
+        flags, jnp.int32, jnp.int64(int(np.prod(b3.shape)) + 2), method="jacobi"
+    )
+    return sub.reshape(bins.shape), iters

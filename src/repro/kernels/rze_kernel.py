@@ -1,0 +1,52 @@
+"""Pallas TPU kernel: RZE bitmap + nonzero counts (paper Fig. 2).
+
+The kernel fuses the zero-test, bitmap bit-packing, and per-chunk
+population count in one VMEM pass.  The order-preserving *compaction*
+(gathering nonzero words to the front) is left to XLA's sort outside the
+kernel: data-dependent scatter is the one RZE step a TPU systolic/vector
+unit has no good primitive for — see DESIGN.md §2.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+CHUNK = 4096
+BLOCK_CHUNKS = 4
+WORD_BITS = 32
+
+
+def _rze_kernel(x_ref, bitmap_ref, counts_ref):
+    x = x_ref[...]  # (B, CHUNK) uint32
+    nb, length = x.shape
+    per = length // WORD_BITS
+    nz = (x != 0).astype(jnp.uint32)
+    iota = jax.lax.broadcasted_iota(jnp.uint32, (WORD_BITS,), 0)
+    shifts = jnp.uint32(WORD_BITS - 1) - iota
+    grouped = nz.reshape(nb, per, WORD_BITS)
+    bitmap_ref[...] = jnp.sum(grouped << shifts[None, None, :], axis=-1, dtype=jnp.uint32)
+    counts_ref[...] = jnp.sum(nz.astype(jnp.int32), axis=1, keepdims=True)
+
+
+def rze_bitmap_u32(words: jnp.ndarray, interpret: bool = False):
+    """(C, 4096) uint32 -> (bitmap (C, 128) uint32, counts (C, 1) int32)."""
+    n_chunks, length = words.shape
+    assert length == CHUNK and words.dtype == jnp.uint32
+    assert n_chunks % BLOCK_CHUNKS == 0
+    grid = (n_chunks // BLOCK_CHUNKS,)
+    per = CHUNK // WORD_BITS
+    return pl.pallas_call(
+        _rze_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((BLOCK_CHUNKS, CHUNK), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((BLOCK_CHUNKS, per), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_CHUNKS, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_chunks, per), jnp.uint32),
+            jax.ShapeDtypeStruct((n_chunks, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(words)

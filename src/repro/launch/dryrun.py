@@ -1,0 +1,290 @@
+"""Multi-pod dry-run (brief deliverable e).
+
+lower+compile every (arch x shape x mesh) cell on 512 placeholder host
+devices, print memory_analysis / cost_analysis, and record the roofline
+inputs (FLOPs, HBM bytes, collective bytes) to JSON.
+
+Usage:
+  python -m repro.launch.dryrun --arch starcoder2-15b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --jobs 4          # every runnable cell
+  python -m repro.launch.dryrun --all --mesh multi      # 2-pod pass only
+"""
+# The VERY FIRST lines, before ANY other import (jax locks the device
+# count on first init):
+import os  # noqa: E402
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import subprocess  # noqa: E402
+import sys  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+from pathlib import Path  # noqa: E402
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "benchmarks" / "results" / "dryrun"
+
+# TPU v5e hardware model (brief: ROOFLINE ANALYSIS constants)
+PEAK_FLOPS = 197e12       # bf16 FLOP/s per chip
+HBM_BW = 819e9            # bytes/s per chip
+ICI_BW = 50e9             # bytes/s per link
+
+
+def _build_cell(arch: str, shape: str, multi_pod: bool):
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.distributed.sharding import use_sharding_rules
+    from repro.launch.mesh import dp_axes, make_production_mesh
+    from repro.launch.shardings import (
+        batch_shardings,
+        cache_shardings,
+        make_sharding_rules,
+        opt_state_shardings,
+        param_shardings,
+    )
+    from repro.models.inputs import decode_token_specs, train_batch_specs
+    from repro.models.model import init_cache, init_params
+    from repro.models.registry import SHAPES, get_arch
+    from repro.optim.adamw import adamw_init
+    from repro.runtime.steps import (
+        make_decode_step,
+        make_encoder_forward,
+        make_prefill,
+        make_train_step,
+    )
+
+    spec = get_arch(arch)
+    if shape in spec.skip_shapes:
+        return {"status": "skipped", "reason": spec.skip_shapes[shape]}
+
+    cfg = spec.config_for(shape)
+    if os.environ.get("REPRO_KV_QUANT") and SHAPES[shape]["kind"] == "decode":
+        cfg = cfg.scaled(kv_quant=True)  # §Perf int8-KV measurement
+    sh = SHAPES[shape]
+    seq, batch, kind = sh["seq_len"], sh["global_batch"], sh["kind"]
+    if kind == "prefill" and cfg.encoder_only:
+        kind = "encode"
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = make_sharding_rules(mesh)
+
+    key = jax.random.key(0)
+    params_sds = jax.eval_shape(lambda k: init_params(cfg, k), key)
+    p_shard = param_shardings(mesh, rules, params_sds)
+
+    with mesh, use_sharding_rules(rules):
+        if kind == "train":
+            opt_sds = jax.eval_shape(adamw_init, params_sds)
+            o_shard = opt_state_shardings(mesh, rules, opt_sds)
+            batch_sds = train_batch_specs(cfg, batch, seq)
+            b_shard = batch_shardings(mesh, rules, batch_sds)
+            step = make_train_step(cfg)
+            jitted = jax.jit(
+                step,
+                in_shardings=(p_shard, o_shard, b_shard),
+                out_shardings=(p_shard, o_shard, None),
+                donate_argnums=(0, 1),
+            )
+            lowered = jitted.lower(params_sds, opt_sds, batch_sds)
+        elif kind in ("prefill", "encode"):
+            batch_sds = train_batch_specs(cfg, batch, seq)
+            batch_sds.pop("labels", None)
+            if kind == "prefill":
+                batch_sds.pop("mask", None)
+                fn = make_prefill(cfg, max_len=seq)
+            else:
+                fn = make_encoder_forward(cfg)
+            b_shard = batch_shardings(mesh, rules, batch_sds)
+            jitted = jax.jit(fn, in_shardings=(p_shard, b_shard))
+            lowered = jitted.lower(params_sds, batch_sds)
+        elif kind == "decode":
+            cache_sds = jax.eval_shape(lambda: init_cache(cfg, batch, seq))
+            c_shard = cache_shardings(mesh, rules, cache_sds, cfg.n_kv_heads)
+            tok_sds = decode_token_specs(cfg, batch)
+            t_shard = NamedSharding(
+                mesh,
+                P(dp_axes(mesh) if batch % (len(mesh.devices.reshape(-1)) //
+                                            mesh.shape["model"]) == 0 else None),
+            )
+            fn = make_decode_step(cfg)
+            jitted = jax.jit(
+                fn,
+                in_shardings=(p_shard, t_shard, c_shard),
+                out_shardings=(None, c_shard),
+                donate_argnums=(2,),
+            )
+            lowered = jitted.lower(params_sds, tok_sds, cache_sds)
+        else:  # pragma: no cover
+            raise ValueError(kind)
+    return {"status": "built", "lowered": lowered, "cfg": cfg, "mesh": mesh,
+            "kind": kind, "seq": seq, "batch": batch}
+
+
+def model_flops(cfg, seq: int, batch: int, kind: str) -> float:
+    """MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D (MoE); decode: D=batch."""
+    n_active = 0
+    d, ff, v = cfg.d_model, cfg.d_ff, cfg.vocab
+    hd, hq, hkv = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    for k in cfg.block_kinds:
+        if k.startswith("attn"):
+            n_active += d * hd * (hq + 2 * hkv) + hq * hd * d  # qkvo
+            if cfg.moe is not None:
+                mult = 3 if cfg.act.endswith("_glu") else 2
+                n_active += cfg.moe.top_k * mult * d * ff
+            else:
+                mult = 3 if cfg.act.endswith("_glu") else 2
+                n_active += mult * d * ff
+        elif k == "mamba2":
+            d_in = cfg.ssm_expand * d
+            n_active += d * (2 * d_in + 2 * cfg.ssm_state + d_in // cfg.ssm_head_dim)
+            n_active += d_in * d
+        elif k == "rwkv6":
+            n_active += 5 * d * d + 2 * d * cfg.d_ff + d * d
+    if getattr(cfg, "name", "").startswith("zamba"):
+        shared = d * hd * (hq + 2 * hkv) + hq * hd * d + 3 * d * ff
+        n_active += shared * (cfg.n_layers // len(cfg.pattern)) // max(cfg.n_layers, 1)
+    n_active += d * v  # lm head (+ tied embed)
+    tokens = batch * (seq if kind in ("train", "prefill", "encode") else 1)
+    mult = 6 if kind == "train" else 2
+    return float(mult) * n_active * tokens
+
+
+def run_cell(arch: str, shape: str, mesh_kind: str) -> dict:
+    t0 = time.time()
+    multi = mesh_kind == "multi"
+    rec = {"arch": arch, "shape": shape, "mesh": mesh_kind}
+    built = _build_cell(arch, shape, multi)
+    if built["status"] == "skipped":
+        rec.update(status="skipped", reason=built["reason"])
+        return rec
+
+    from repro.launch.hlo_parse import analyze
+
+    lowered = built["lowered"]
+    n_dev = 512 if multi else 256
+    try:
+        compiled = lowered.compile()
+    except Exception as e:  # noqa: BLE001
+        rec.update(status="compile_error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-4000:])
+        return rec
+
+    mem = compiled.memory_analysis()
+    mem_d = {}
+    for attr in ("generated_code_size_in_bytes", "argument_size_in_bytes",
+                 "output_size_in_bytes", "temp_size_in_bytes",
+                 "alias_size_in_bytes", "peak_memory_in_bytes"):
+        if hasattr(mem, attr):
+            mem_d[attr] = int(getattr(mem, attr))
+    print(f"[{arch} | {shape} | {mesh_kind}] memory_analysis:", mem_d, flush=True)
+
+    # brief: print cost_analysis (NOTE: XLA does not multiply while-loop
+    # bodies by trip counts, so the roofline uses our HLO accounting)
+    cost = dict(compiled.cost_analysis() or {})
+    print(f"[{arch} | {shape} | {mesh_kind}] cost_analysis: "
+          f"flops={float(cost.get('flops', 0.0)):.3e} "
+          f"bytes={float(cost.get('bytes accessed', 0.0)):.3e}", flush=True)
+
+    hlo = analyze(compiled.as_text(), n_dev)
+
+    cfg = built["cfg"]
+    mf = model_flops(cfg, built["seq"], built["batch"], built["kind"])
+
+    # roofline terms (per device, seconds)
+    t_compute = hlo["flops"] / PEAK_FLOPS
+    t_memory = hlo["hbm_bytes"] / HBM_BW
+    # v5e: ~4 usable ICI links per chip; collective bytes are per device
+    t_collective = hlo["collective_bytes"] / (ICI_BW * 4)
+
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_collective}
+    dominant = max(terms, key=terms.get)
+    rec.update(
+        status="ok",
+        compile_seconds=round(time.time() - t0, 1),
+        memory=mem_d,
+        xla_cost_flops=float(cost.get("flops", 0.0)),
+        flops_per_device=hlo["flops"],
+        hbm_bytes_per_device=hlo["hbm_bytes"],
+        collective_bytes_per_device=hlo["collective_bytes"],
+        collective_counts=hlo["collective_counts"],
+        model_flops_total=mf,
+        model_flops_per_device=mf / n_dev,
+        useful_flop_fraction=(mf / n_dev) / hlo["flops"] if hlo["flops"] else None,
+        roofline=terms,
+        dominant=dominant,
+    )
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--jobs", type=int, default=2)
+    args = ap.parse_args()
+
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    if not args.all:
+        assert args.arch and args.shape
+        for m in meshes:
+            rec = run_cell(args.arch, args.shape, m)
+            out = RESULTS_DIR / f"{args.arch}__{args.shape}__{m}.json"
+            out.write_text(json.dumps(rec, indent=2))
+            print(json.dumps({k: v for k, v in rec.items()
+                              if k not in ("traceback",)}, indent=2), flush=True)
+        return
+
+    # orchestrate: one subprocess per cell (isolation + parallelism)
+    from repro.models.registry import ARCHITECTURES, SHAPES
+
+    jobs = []
+    for arch in ARCHITECTURES:
+        for shape in SHAPES:
+            for m in meshes:
+                out = RESULTS_DIR / f"{arch}__{shape}__{m}.json"
+                if out.exists() and json.loads(out.read_text()).get("status") in ("ok", "skipped"):
+                    continue
+                jobs.append((arch, shape, m))
+    print(f"{len(jobs)} cells to run", flush=True)
+    running: list[tuple[subprocess.Popen, tuple]] = []
+    failures = 0
+    while jobs or running:
+        while jobs and len(running) < args.jobs:
+            arch, shape, m = jobs.pop(0)
+            cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                   "--arch", arch, "--shape", shape, "--mesh", m]
+            proc = subprocess.Popen(cmd, stdout=subprocess.DEVNULL,
+                                    stderr=subprocess.DEVNULL)
+            running.append((proc, (arch, shape, m)))
+            print(f"started {arch} {shape} {m}", flush=True)
+        time.sleep(3)
+        still = []
+        for proc, cell in running:
+            if proc.poll() is None:
+                still.append((proc, cell))
+            else:
+                arch, shape, m = cell
+                out = RESULTS_DIR / f"{arch}__{shape}__{m}.json"
+                status = "missing"
+                if out.exists():
+                    status = json.loads(out.read_text()).get("status")
+                if status not in ("ok", "skipped"):
+                    failures += 1
+                print(f"finished {cell} -> {status}", flush=True)
+        running = still
+    print(f"done; {failures} failures", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,401 @@
+"""Roofline accounting from post-optimization (SPMD-partitioned) HLO.
+
+Why not compiled.cost_analysis()?  XLA's analysis counts while-loop
+bodies ONCE, so a scanned 36-layer model reports ~1/36th of its FLOPs.
+We therefore parse the HLO module ourselves:
+
+  * per-computation symbol tables (types of every value, incl. params),
+  * dot FLOPs = 2 * numel(result) * contracted_extent,
+  * HBM bytes at fusion granularity (operands + results of top-level
+    ops; fused bodies are I/O-counted at their fusion op),
+  * collective wire bytes by kind and replica-group size g (ring):
+      all-gather out*(g-1)/g | reduce-scatter out*(g-1) |
+      all-reduce 2*out*(g-1)/g | all-to-all out*(g-1)/g | permute out,
+  * a call graph where while bodies are multiplied by their trip count
+    (read from the `constant(N)` bound in the condition computation),
+    fusions contribute FLOPs but not bytes, scalar to_apply reducers
+    are ignored.
+
+Everything is per device: the module is the already-partitioned
+program for one participant.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "token": 0, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_ARRAY_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_LINE_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*)$"
+)
+_SKIP_BYTES_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "while", "call", "conditional", "after-all", "partition-id",
+    "replica-id", "custom-call",  # custom-call: CPU runtime thunks
+}
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for m in _ARRAY_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _first_array(type_str: str):
+    m = _ARRAY_RE.search(type_str)
+    if not m:
+        return None, []
+    dims = [int(d) for d in m.group(2).split(",") if d]
+    return m.group(1), dims
+
+
+def _group_size(line: str, n_devices: int) -> int:
+    m = re.search(r"replica_groups=\{\{([\d,]+)\}", line)
+    if m:
+        return len(m.group(1).split(","))
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)  # iota v2
+    if m:
+        return int(m.group(2))
+    return n_devices
+
+
+@dataclass
+class Comp:
+    name: str
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll_counts: dict = field(default_factory=lambda: defaultdict(float))
+    calls: list = field(default_factory=list)  # (callee, mult, kind)
+
+
+def _parse_params(header: str) -> dict[str, str]:
+    m = re.search(r"\(([^()]*(?:\([^()]*\)[^()]*)*)\)\s*->", header)
+    if not m:
+        return {}
+    body = m.group(1)
+    out = {}
+    depth = 0
+    token = ""
+    parts = []
+    for ch in body:
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+        if ch == "," and depth == 0:
+            parts.append(token)
+            token = ""
+        else:
+            token += ch
+    if token.strip():
+        parts.append(token)
+    for p in parts:
+        if ":" in p:
+            name, t = p.split(":", 1)
+            out[name.strip().lstrip("%")] = t.strip()
+    return out
+
+
+def _collect(hlo: str):
+    """Phase 1: split into computations with raw lines + param types."""
+    blocks: dict[str, dict] = {}
+    current = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        header = re.match(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s+\(.*\)\s*->\s*.*\{\s*$", line)
+        if header:
+            current = header.group(1)
+            blocks[current] = {"params": _parse_params(line), "lines": []}
+            continue
+        if current is None:
+            continue
+        if line.strip() == "}":
+            current = None
+            continue
+        blocks[current]["lines"].append(line)
+    return blocks
+
+
+_UNARY_PASSTHRU = {"convert", "bitcast", "copy", "reshape", "transpose"}
+_SLICERS = {"dynamic-slice", "slice", "gather"}
+
+
+def _param_charges(block) -> tuple[list, float]:
+    """Phase 2 (per fused computation): how many HBM bytes each param
+    really costs when this body executes as one fused kernel.
+
+    A param consumed only through slicing ops costs its slices, not its
+    full extent; a param that is the in-place target of the root
+    dynamic-update-slice costs nothing (aliased).  Returns
+    ([(param_name, charge_bytes)...], out_bytes)."""
+    params: dict[str, str] = block["params"]
+    origin: dict[str, str] = {n: n for n in params}
+    consumers: dict[str, list] = {n: [] for n in params}
+    symbols: dict[str, str] = dict(params)
+    defs: dict[str, tuple] = {}
+    root_line = None
+    for line in block["lines"]:
+        m = _LINE_RE.match(line)
+        if not m:
+            continue
+        lhs, rtype, op, rest = m.groups()
+        symbols[lhs] = rtype
+        defs[lhs] = (op, rtype, rest)
+        if line.strip().startswith("ROOT") or " ROOT " in line:
+            root_line = (lhs, rtype, op, rest)
+        opnds = re.findall(r"%([\w\.\-]+)", rest.split(" metadata=")[0])
+        srcs = [origin.get(o) for o in opnds]
+        if op in _UNARY_PASSTHRU and srcs and srcs[0] is not None:
+            origin[lhs] = srcs[0]  # track chains back to params
+        for sname in set(x for x in srcs if x):
+            consumers[sname].append((op, rtype, opnds))
+
+    # walk the root through unary passthru ops (ROOT convert(dus(...))
+    # is still an in-place update of the aliased carry)
+    if root_line is not None:
+        seen_hops = 0
+        lhs, rtype, op, rest = root_line
+        while op in _UNARY_PASSTHRU and seen_hops < 8:
+            inner = re.findall(r"%([\w\.\-]+)", rest.split(" metadata=")[0])
+            if not inner or inner[0] not in defs:
+                break
+            nxt = defs[inner[0]]
+            op, rtype, rest = nxt[0], nxt[1], nxt[2]
+            seen_hops += 1
+        root_line = (lhs, rtype, op, rest)
+    charges = []
+    dus_target = None
+    if root_line and root_line[2] == "dynamic-update-slice":
+        opnds = re.findall(r"%([\w\.\-]+)", root_line[3])
+        if opnds:
+            dus_target = origin.get(opnds[0])
+    for name, ptype in params.items():
+        uses = consumers.get(name, [])
+        full = _type_bytes(ptype)
+        if not uses:
+            charges.append((name, 0.0))
+        elif name == dus_target:
+            charges.append((name, 0.0))  # in-place update target
+        elif all(u[0] in _SLICERS for u in uses):
+            charges.append((name, float(sum(_type_bytes(u[1]) for u in uses))))
+        else:
+            charges.append((name, float(full)))
+    if root_line:
+        if root_line[2] == "dynamic-update-slice":
+            # write only the updated region: use the update operand size
+            opnds = re.findall(r"%([\w\.\-]+)", root_line[3])
+            upd = symbols.get(opnds[1], "") if len(opnds) > 1 else ""
+            out_bytes = float(_type_bytes(upd) or _type_bytes(root_line[1]))
+        else:
+            out_bytes = float(_type_bytes(root_line[1]))
+    else:
+        out_bytes = 0.0
+    return charges, out_bytes
+
+
+def parse_module(hlo: str) -> dict[str, Comp]:
+    blocks = _collect(hlo)
+    fusion_meta = {name: _param_charges(b) for name, b in blocks.items()}
+
+    comps: dict[str, Comp] = {}
+    for name, block in blocks.items():
+        current = Comp(name)
+        comps[name] = current
+        symbols: dict[str, str] = dict(block["params"])
+        for line in block["lines"]:
+            m = _LINE_RE.match(line)
+            if not m:
+                continue
+            lhs, rtype, op, rest = m.groups()
+            symbols[lhs] = rtype
+            if op == "parameter":
+                continue
+
+            # --- while loops: body x trip, condition x1
+            if op == "while":
+                mw = re.search(r"condition=%?([\w\.\-]+),?\s*body=%?([\w\.\-]+)", line)
+                if not mw:
+                    mw = re.search(r"body=%?([\w\.\-]+),?\s*condition=%?([\w\.\-]+)", line)
+                    cond, body = (mw.group(2), mw.group(1)) if mw else (None, None)
+                else:
+                    cond, body = mw.group(1), mw.group(2)
+                if body:
+                    current.calls.append((body, None, "while"))
+                    current.calls.append((cond, 1, "cond"))
+                continue
+
+            # --- fusions / calls / conditionals
+            if op == "fusion":
+                mc = re.search(r"calls=%?([\w\.\-]+)", line)
+                if mc:
+                    current.calls.append((mc.group(1), 1, "fusion"))
+                    # charge HBM I/O per the fused body's real access
+                    charges, out_b = fusion_meta.get(mc.group(1), ([], 0.0))
+                    opnds = re.findall(r"%([\w\.\-]+)", rest.split(" metadata=")[0])
+                    for (pname, charge), opnd in zip(charges, opnds):
+                        current.bytes += charge
+                    current.bytes += out_b
+            elif op in ("call", "async-start"):
+                mc = re.search(r"to_apply=%?([\w\.\-]+)|calls=%?([\w\.\-]+)", line)
+                if mc:
+                    current.calls.append((mc.group(1) or mc.group(2), 1, "call"))
+            elif op == "conditional":
+                mc = re.search(r"branch_computations=\{([^}]*)\}", line)
+                if mc:
+                    for b in mc.group(1).split(","):
+                        current.calls.append((b.strip().lstrip("%"), 1, "call"))
+
+            base = op[:-6] if op.endswith("-start") else op
+            if base in _COLLECTIVES and not op.endswith("-done"):
+                out_b = _type_bytes(rtype)
+                g = _group_size(line, 0) or 1
+                if g > 1:
+                    ring = (g - 1) / g
+                    wire = {
+                        "all-gather": out_b * ring,
+                        "reduce-scatter": out_b * (g - 1),
+                        "all-reduce": 2 * out_b * ring,
+                        "all-to-all": out_b * ring,
+                        "collective-permute": out_b,
+                    }[base]
+                    current.coll_bytes += wire
+                    current.coll_counts[base] += 1
+
+            # --- dot flops
+            if op == "dot":
+                operands = re.findall(r"%([\w\.\-]+)", rest)
+                lhs_t = symbols.get(operands[0], "") if operands else ""
+                _, lhs_dims = _first_array(lhs_t)
+                mcd = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
+                contracted = 1
+                if mcd and lhs_dims:
+                    for d in mcd.group(1).split(","):
+                        if d and int(d) < len(lhs_dims):
+                            contracted *= lhs_dims[int(d)]
+                _, rdims = _first_array(rtype)
+                numel = 1
+                for d in rdims:
+                    numel *= d
+                current.flops += 2.0 * numel * contracted
+
+            # --- HBM bytes (non-fusion top-level ops), TPU-faithful:
+            # convert/copy fuse or alias away; slicing reads the region;
+            # dus writes in place.
+            if op in ("convert", "copy", "fusion"):
+                pass
+            elif op in _SLICERS:
+                current.bytes += 2 * _type_bytes(rtype)
+            elif op == "dynamic-update-slice":
+                rb = _type_bytes(rtype)
+                small = 0
+                for opnd in re.findall(r"%([\w\.\-]+)", rest.split(" metadata=")[0])[:8]:
+                    sz = _type_bytes(symbols.get(opnd, ""))
+                    if sz != rb:
+                        small += sz
+                current.bytes += 2 * small
+            elif op not in _SKIP_BYTES_OPS:
+                b = _type_bytes(rtype)
+                for opnd in re.findall(r"%([\w\.\-]+)", rest.split(" metadata=")[0])[:8]:
+                    if opnd in symbols:
+                        b += _type_bytes(symbols[opnd])
+                current.bytes += b
+
+    return comps
+
+
+def analyze(hlo: str, n_devices: int) -> dict:
+    comps = parse_module(hlo)
+
+    # trip counts: scan condition computations' raw text for constants
+    cond_consts: dict[str, int] = {}
+    current = None
+    for line in hlo.splitlines():
+        header = re.match(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s+\(.*\)\s*->\s*.*\{\s*$", line)
+        if header:
+            current = header.group(1)
+            continue
+        if current and "constant(" in line:
+            for m in re.finditer(r"constant\((\d+)\)", line):
+                cond_consts[current] = max(cond_consts.get(current, 1), int(m.group(1)))
+
+    # resolve while trip counts
+    for c in comps.values():
+        resolved = []
+        i = 0
+        while i < len(c.calls):
+            callee, mult, kind = c.calls[i]
+            if kind == "while":
+                # the matching cond edge is next
+                cond = c.calls[i + 1][0] if i + 1 < len(c.calls) else None
+                trip = cond_consts.get(cond, 1)
+                resolved.append((callee, trip, "while"))
+                i += 2
+                continue
+            resolved.append((callee, mult, kind))
+            i += 1
+        c.calls = resolved
+
+    called = {callee for c in comps.values() for callee, _, _ in c.calls}
+    roots = [n for n in comps if n not in called]
+
+    memo: dict[str, tuple] = {}
+
+    def total(name: str, depth=0):
+        if name in memo:
+            return memo[name]
+        if name not in comps or depth > 64:
+            return 0.0, 0.0, 0.0, {}
+        c = comps[name]
+        fl, by, cb = c.flops, c.bytes, c.coll_bytes
+        cc = dict(c.coll_counts)
+        for callee, mult, kind in c.calls:
+            if kind == "cond":
+                continue
+            cfl, cby, ccb, ccc = total(callee, depth + 1)
+            fl += mult * cfl
+            cb += mult * ccb
+            if kind != "fusion":
+                by += mult * cby
+            for k, v in ccc.items():
+                cc[k] = cc.get(k, 0) + mult * v
+        memo[name] = (fl, by, cb, cc)
+        return memo[name]
+
+    flops = hbm = coll = 0.0
+    counts: dict[str, float] = defaultdict(float)
+    for r in roots:
+        fl, by, cb, cc = total(r)
+        flops += fl
+        hbm += by
+        coll += cb
+        for k, v in cc.items():
+            counts[k] += v
+    return {
+        "flops": flops,
+        "hbm_bytes": hbm,
+        "collective_bytes": coll,
+        "collective_counts": {k: int(v) for k, v in counts.items()},
+    }
+
+
+def collective_stats(hlo: str, n_devices: int) -> dict:
+    a = analyze(hlo, n_devices)
+    return {"bytes": a["collective_bytes"], "counts": a["collective_counts"]}

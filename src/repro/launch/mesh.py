@@ -1,0 +1,22 @@
+"""Production mesh definition (brief: MULTI-POD DRY-RUN step 1).
+
+A FUNCTION, not a module constant — importing this module never touches
+jax device state."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def dp_axes(mesh) -> tuple:
+    """Axes carrying the batch: ('pod','data') multi-pod, ('data',) single."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def tp_axis(mesh) -> str:
+    return "model"

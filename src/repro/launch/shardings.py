@@ -1,0 +1,187 @@
+"""Sharding policy: param/optimizer/batch/cache PartitionSpecs.
+
+Scheme (DESIGN.md §5): DP over ('pod','data'), TP/SP/EP over 'model',
+FSDP (ZeRO-3) over 'data'.  Param rules are path-regex -> logical spec;
+stacked scan dims (leading n_groups) are auto-skipped.  Any entry that
+does not divide its dim is dropped (replicated) — see
+distributed.sharding.drop_nondivisible.
+"""
+from __future__ import annotations
+
+import re
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..distributed.sharding import ShardingRules, drop_nondivisible
+from .mesh import dp_axes
+
+# path-regex -> tuple of logical axis names (applied to trailing dims).
+# First match wins; order matters (moe before generic ffn).
+PARAM_RULES = [
+    # experts over 'model' (EP). When E does not divide |model| (mixtral
+    # 8e on a 16-wide axis) the expert entry is dropped by the
+    # divisibility rule and the d_ff entry takes the 'model' axis instead
+    # (XP mode) — param_spec deduplicates left-to-right, so exactly one
+    # of the two ever holds 'model'.
+    (r"moe/(w_gate|w_up)$", ("ep", "fsdp", "tp_ffn")),
+    (r"moe/w_down$", ("ep", "tp_ffn", "fsdp")),
+    (r"moe/router$", (None, None)),
+    (r"embed$", ("tp", "fsdp")),
+    (r"img_proj$", ("fsdp", "tp")),
+    (r"lm_head$", ("fsdp", "tp")),
+    (r"attn/w[qkv]$", ("fsdp", "tp")),
+    (r"attn/wo$", ("tp", "fsdp")),
+    (r"attn/b[qkv]$", ("tp",)),
+    (r"(ffn/w_up|ffn/w_gate)$", ("fsdp", "tp")),
+    (r"ffn/w_down$", ("tp", "fsdp")),
+    (r"mamba/w_in$", ("fsdp", "tp")),
+    (r"mamba/w_out$", ("tp", "fsdp")),
+    (r"mamba/conv_w$", (None, "tp")),
+    (r"mamba/conv_b$", ("tp",)),
+    (r"rwkv/(w_r|w_k|w_v|w_g|cm_k|cm_r)$", ("fsdp", "tp")),
+    (r"rwkv/(w_o|cm_v)$", ("tp", "fsdp")),
+    (r"rwkv/w_decay_1$", ("fsdp", None)),
+    (r"rwkv/w_decay_2$", (None, "fsdp")),
+    (r"rwkv/mix$", (None, "fsdp")),
+    (r"(norm|norm_post|final_norm|out_norm|ln_out)/(scale|bias)$", ("fsdp",)),
+    (r".*", ()),  # everything else replicated
+]
+
+
+def logical_rules(mesh) -> dict:
+    dp = dp_axes(mesh)
+    return {
+        "batch": dp,
+        "seq": "model",          # sequence parallelism at layer boundaries
+        "seq_noshard": None,
+        "heads": "model",
+        "ffn": "model",
+        "embed": None,
+        "vocab": "model",
+        "experts": "model",
+        # param-rule names
+        "fsdp": "data",
+        "tp": "model",
+        "tp_ffn": "model",
+        "ep": "model",
+    }
+
+
+def make_sharding_rules(mesh) -> ShardingRules:
+    return ShardingRules(
+        mesh=mesh,
+        rules=logical_rules(mesh),
+        ep_axis="model",
+        dp_axes=dp_axes(mesh),
+    )
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def param_spec(mesh, rules: ShardingRules, path: str, shape) -> P:
+    for pattern, names in PARAM_RULES:
+        if re.search(pattern, path):
+            logical = names
+            break
+    # apply to trailing dims; leading (stacked scan) dims replicated
+    lead = len(shape) - len(logical)
+    if lead < 0:
+        logical = logical[-len(shape):] if len(shape) else ()
+        lead = 0
+    entries = (None,) * lead + tuple(rules.rules.get(n) for n in logical)
+    spec = drop_nondivisible(mesh, P(*entries), shape)
+    # deduplicate mesh axes left-to-right (a dropped 'ep' frees 'model'
+    # for 'tp_ffn'; a surviving one must win)
+    seen: set = set()
+    out = []
+    for e in spec:
+        names = e if isinstance(e, tuple) else (e,)
+        if e is not None and any(n in seen for n in names):
+            out.append(None)
+            continue
+        seen.update(n for n in names if n)
+        out.append(e)
+    return P(*out)
+
+
+def param_shardings(mesh, rules: ShardingRules, params_tree):
+    """Tree of NamedShardings matching a params (or grads/moments) tree."""
+    def leaf(path, x):
+        spec = param_spec(mesh, rules, _path_str(path), x.shape)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(leaf, params_tree)
+
+
+def opt_state_shardings(mesh, rules: ShardingRules, opt_tree):
+    def leaf(path, x):
+        ps = _path_str(path)
+        if ps.endswith("step") or x.ndim == 0:
+            return NamedSharding(mesh, P())
+        # m/<param path>, v/<param path> share the param rule
+        ps = re.sub(r"^(m|v)/", "", ps)
+        spec = param_spec(mesh, rules, ps, x.shape)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(leaf, opt_tree)
+
+
+def batch_shardings(mesh, rules: ShardingRules, batch_tree):
+    dp = dp_axes(mesh)
+
+    def leaf(x):
+        if x.ndim == 1:
+            spec = P(dp)
+        elif x.ndim == 2:
+            spec = P(dp, "model")           # (B, S) tokens: SP on seq
+        else:
+            spec = P(dp, "model", None)     # (B, S, d) frames/embeds
+        return NamedSharding(mesh, drop_nondivisible(mesh, spec, x.shape))
+
+    return jax.tree.map(leaf, batch_tree)
+
+
+def cache_shardings(mesh, rules: ShardingRules, cache_tree, n_kv_heads: int):
+    """KV caches: batch over DP; heads over 'model' when divisible, else
+    seq over 'model' (GSPMD all-gathers per layer — hillclimb target)."""
+    dp = dp_axes(mesh)
+    tp = mesh.shape["model"]
+    heads_shardable = n_kv_heads % tp == 0 and n_kv_heads >= tp
+
+    def leaf(path, x):
+        ps = _path_str(path)
+        nd = x.ndim
+        if nd == 0:
+            return NamedSharding(mesh, P())
+        # trailing-dim spec; leading (stacked group) dims replicated
+        if ps.endswith("/k") or ps.endswith("/v") or ps.endswith("_scale"):
+            # (..., B, Hkv, S, D) and their int8-KV scale twins (..., 1)
+            tail = (("model", None, None) if heads_shardable
+                    else (None, "model", None))
+            entries = [None] * (nd - 4) + [dp, *tail]
+        elif "conv" in ps:                                 # (..., B, K-1, ch)
+            entries = [None] * (nd - 3) + [dp, None, "model"]
+        elif "ssm" in ps or ps.endswith("state"):          # (..., B, H, p, n)
+            entries = [None] * (nd - 4) + [dp, "model", None, None]
+        elif "shift" in ps:                                # (..., B, 1, d)
+            entries = [None] * (nd - 3) + [dp, None, None]
+        elif nd >= 2:
+            entries = [None] * (nd - 2) + [dp, None]
+        else:
+            entries = [None] * nd
+        spec = P(*entries)
+        return NamedSharding(mesh, drop_nondivisible(mesh, spec, x.shape))
+
+    return jax.tree_util.tree_map_with_path(leaf, cache_tree)

@@ -1,0 +1,12 @@
+"""Model zoo: the 10 assigned architectures as composable JAX modules.
+
+Everything is functional: params are pytrees of jnp arrays, models are
+(init, apply) pairs driven by ModelConfig.  All math uses explicit
+dtypes (bf16 compute / f32 accumulate) — the package-level x64 flag
+never leaks in.  Layer stacks are lax.scan'd + remat'd so the HLO stays
+small enough to compile 132B-parameter graphs in the dry-run.
+"""
+from .config import ModelConfig
+from .registry import ARCHITECTURES, get_arch
+
+__all__ = ["ModelConfig", "ARCHITECTURES", "get_arch"]

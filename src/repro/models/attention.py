@@ -1,0 +1,109 @@
+"""Blockwise (flash-style) attention in pure JAX.
+
+Never materializes the (Sq, Skv) score matrix: a lax.scan over KV blocks
+carries running (max, sum, weighted-acc) — the standard online-softmax
+recurrence.  This is what makes hubert's 32k x 32k prefill and gemma2's
+global layers compile within dry-run memory, and it keeps the HLO small.
+
+Supports: GQA (query groups share KV heads), causal masking with a KV
+offset (decode), sliding windows (mixtral SWA, gemma2 local layers),
+logit soft-capping (gemma2), QKV bias (qwen2.5).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import softcap
+
+NEG_INF = -1e30
+
+
+def blockwise_attention(
+    q: jnp.ndarray,           # (B, Hq, Sq, D)
+    k: jnp.ndarray,           # (B, Hkv, Skv, D)
+    v: jnp.ndarray,           # (B, Hkv, Skv, D)
+    *,
+    causal: bool = True,
+    q_offset=0,               # absolute position of q[0] (decode: cache len)
+    window: int | None = None,
+    cap: float | None = None,
+    block_k: int = 1024,
+    kv_len=None,              # dynamic valid KV length (decode caches)
+    k_start=0,                # absolute position of k[0] (ring caches)
+    k_scale=None,             # (B, Hkv, Skv, 1) f32: int8 KV dequant scales
+    v_scale=None,
+) -> jnp.ndarray:
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    g = hq // hkv
+    # keep q/k/v in bf16 and accumulate in f32 via preferred_element_type:
+    # an in-loop astype(f32) of the KV block gets hoisted by XLA into an
+    # f32 copy of the ENTIRE cache stack (3 GB/layer on decode_32k).
+    # REPRO_PERF_F32_ATTN reverts to the f32-operand variant (§Perf).
+    import os as _os
+    _f32_attn = bool(_os.environ.get("REPRO_PERF_F32_ATTN"))
+    if _f32_attn:
+        qg = (q.reshape(b, hkv, g, sq, d).astype(jnp.float32)
+              * (1.0 / np.sqrt(d)))
+    else:
+        qg = q.reshape(b, hkv, g, sq, d) * jnp.asarray(1.0 / np.sqrt(d), q.dtype)
+
+    if skv % block_k != 0:
+        block_k = skv  # small inputs: single block
+    n_blocks = skv // block_k
+
+    kb = jnp.moveaxis(k.reshape(b, hkv, n_blocks, block_k, d), 2, 0)
+    vb = jnp.moveaxis(v.reshape(b, hkv, n_blocks, block_k, d), 2, 0)
+    ksb = vsb = None
+    if k_scale is not None:
+        ksb = jnp.moveaxis(k_scale.reshape(b, hkv, n_blocks, block_k, 1), 2, 0)
+        vsb = jnp.moveaxis(v_scale.reshape(b, hkv, n_blocks, block_k, 1), 2, 0)
+    q_pos = q_offset + jnp.arange(sq)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        kc, vc, blk, ksc, vsc = xs  # kc: (b, hkv, block_k, d)
+        if ksc is not None:  # int8 KV: dequantize the block in-register
+            kc = (kc.astype(jnp.float32) * ksc).astype(qg.dtype)
+            vc = (vc.astype(jnp.float32) * vsc).astype(qg.dtype)
+        s = jnp.einsum("bhgqd,bhkd->bhgqk", qg,
+                       kc.astype(jnp.float32) if _f32_attn else kc,
+                       preferred_element_type=jnp.float32)
+        s = softcap(s, cap)
+        k_pos = k_start + blk * block_k + jnp.arange(block_k)
+        mask = (k_pos >= 0)[None, :]  # ring caches: unfilled slots
+        if causal:
+            mask &= q_pos[:, None] >= k_pos[None, :]
+        if window is not None:
+            mask &= q_pos[:, None] - k_pos[None, :] < window
+        if kv_len is not None:
+            mask &= (k_pos < kv_len)[None, :]  # absolute valid length
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        scale_old = jnp.exp(m - m_new)
+        l_new = l * scale_old + jnp.sum(p, axis=-1)
+        # p in bf16 for the PV matmul (f32 stats kept): flash-standard,
+        # avoids the hoisted f32 V-cache copy
+        acc_new = acc * scale_old[..., None] + jnp.einsum(
+            "bhgqk,bhkd->bhgqd",
+            p if _f32_attn else p.astype(vc.dtype),
+            vc.astype(jnp.float32) if _f32_attn else vc,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, hkv, g, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hkv, g, sq), jnp.float32)
+    a0 = jnp.zeros((b, hkv, g, sq, d), jnp.float32)
+    # checkpoint the block body: without it the backward pass keeps the
+    # (n_blocks, B, H, G, Sq, block_k) f32 probability stack alive
+    (m, l, acc), _ = jax.lax.scan(
+        jax.checkpoint(body, prevent_cse=False),
+        (m0, l0, a0), (kb, vb, jnp.arange(n_blocks), ksb, vsb)
+    )
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(b, hq, sq, d).astype(q.dtype)

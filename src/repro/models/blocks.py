@@ -1,0 +1,200 @@
+"""Per-layer blocks: attention (+cache), dense FFN; MoE/SSM live in
+sibling modules.  Everything is (init, apply) on plain dict pytrees."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..distributed.sharding import logical_constraint
+from .attention import blockwise_attention
+from .common import apply_rope, cdtype, norm_apply, norm_init, normal_init, pdtype
+
+
+# ------------------------------------------------------------- attention
+
+def attn_init(key, cfg):
+    d, hq, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    std = 0.02
+    dt = pdtype(cfg)
+    p = {
+        "norm": norm_init(cfg),
+        "wq": normal_init(ks[0], (d, hq * hd), std, dt),
+        "wk": normal_init(ks[1], (d, hkv * hd), std, dt),
+        "wv": normal_init(ks[2], (d, hkv * hd), std, dt),
+        "wo": normal_init(ks[3], (hq * hd, d), std / np.sqrt(2 * cfg.n_layers), dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((hq * hd,), dt)
+        p["bk"] = jnp.zeros((hkv * hd,), dt)
+        p["bv"] = jnp.zeros((hkv * hd,), dt)
+    if cfg.post_norm:
+        p["norm_post"] = norm_init(cfg)
+    return p
+
+
+def attn_apply(p, x, cfg, *, window, cache=None, q_offset=0):
+    """x: (B, S, d). cache: None | dict(k, v, len) for decode/prefill.
+
+    Returns (out, new_cache).  KV cache layout: (B, Hkv, Smax, D).
+    """
+    b, s, d = x.shape
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ct = cdtype(cfg)
+    h = norm_apply(x, p["norm"], cfg)
+
+    def proj(w, bias_key, nh):
+        y = jnp.einsum("bsd,dh->bsh", h, w.astype(ct))
+        if bias_key in p:
+            y = y + p[bias_key].astype(ct)
+        return y.reshape(b, s, nh, hd).transpose(0, 2, 1, 3)
+
+    q = proj(p["wq"], "bq", hq)
+    k = proj(p["wk"], "bk", hkv)
+    v = proj(p["wv"], "bv", hkv)
+    # pin shardings BEFORE the KV-block scan: without these GSPMD picks
+    # per-block reshardings inside the loop (trip-multiplied collectives).
+    # REPRO_PERF_NO_KV_PIN reverts to the paper-faithful-baseline layout
+    # for the §Perf before/after measurements.
+    import os as _os
+    if not _os.environ.get("REPRO_PERF_NO_KV_PIN"):
+        q = logical_constraint(q, "batch", "heads", "seq_noshard", None)
+        k = logical_constraint(k, "batch", "heads", "seq_noshard", None)
+        v = logical_constraint(v, "batch", "heads", "seq_noshard", None)
+    else:
+        q = logical_constraint(q, "batch", "heads", "seq_noshard", None)
+        k = logical_constraint(k, "batch", None, "seq_noshard", None)
+
+    positions = q_offset + jnp.arange(s)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+
+    k_start = 0
+    kv_len = None
+    k_scale = v_scale = None
+    if cache is None:
+        new_cache = None
+        k_full, v_full = k, v
+    elif window is not None and cache["k"].shape[2] <= window:
+        # Ring cache for sliding-window layers: holds only the last W
+        # positions, right-aligned (bounds long_500k SWA memory).
+        w_len = cache["k"].shape[2]
+        kd, vd = cache["k"].dtype, cache["v"].dtype
+        if s > 1:  # prefill: attend within prompt, store the last W keys
+            k_full, v_full = k, v
+            take = min(s, w_len)
+            kw, vw = k[:, :, s - take :].astype(kd), v[:, :, s - take :].astype(vd)
+            if take < w_len:
+                pad = [(0, 0), (0, 0), (w_len - take, 0), (0, 0)]
+                kw, vw = jnp.pad(kw, pad), jnp.pad(vw, pad)
+            new_cache = {"k": kw, "v": vw}
+        else:  # decode: shift-left, append, attend over the window
+            ck = jnp.roll(cache["k"], -1, axis=2).at[:, :, -1:].set(k.astype(kd))
+            cv = jnp.roll(cache["v"], -1, axis=2).at[:, :, -1:].set(v.astype(vd))
+            new_cache = {"k": ck, "v": cv}
+            k_full, v_full = ck, cv
+            k_start = q_offset + s - w_len  # unfilled slots get k_pos < 0
+    elif cache["k"].dtype == jnp.int8:
+        # int8 KV cache (cfg.kv_quant): symmetric per-(b,h,position)
+        # scales; the paper's guaranteed-quantization machinery applied
+        # to the serving hot path. 2x capacity, ~2x KV read bandwidth.
+        zero = jnp.int32(0)
+        idx = (zero, zero, jnp.asarray(q_offset, jnp.int32), zero)
+
+        def quant(t):
+            t32 = t.astype(jnp.float32)
+            scale = jnp.max(jnp.abs(t32), axis=-1, keepdims=True) / 127.0
+            scale = jnp.maximum(scale, 1e-20)
+            q8 = jnp.clip(jnp.round(t32 / scale), -127, 127).astype(jnp.int8)
+            return q8, scale
+
+        k8, ks_new = quant(k)
+        v8, vs_new = quant(v)
+        ck = jax.lax.dynamic_update_slice(cache["k"], k8, idx)
+        cv = jax.lax.dynamic_update_slice(cache["v"], v8, idx)
+        cks = jax.lax.dynamic_update_slice(cache["k_scale"], ks_new, idx)
+        cvs = jax.lax.dynamic_update_slice(cache["v_scale"], vs_new, idx)
+        new_cache = {"k": ck, "v": cv, "k_scale": cks, "v_scale": cvs}
+        k_full, v_full = ck, cv
+        k_scale, v_scale = cks, cvs
+        kv_len = q_offset + s
+    else:
+        zero = jnp.int32(0)
+        idx = (zero, zero, jnp.asarray(q_offset, jnp.int32), zero)
+        ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), idx)
+        cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), idx)
+        new_cache = {"k": ck, "v": cv}
+        k_full, v_full = ck, cv
+        kv_len = q_offset + s
+
+    out = blockwise_attention(
+        q, k_full, v_full,
+        causal=cfg.causal,
+        q_offset=q_offset,
+        window=window,
+        cap=cfg.attn_softcap,
+        kv_len=kv_len,
+        k_start=k_start,
+        k_scale=k_scale,
+        v_scale=v_scale,
+    )
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, hq * hd)
+    out = jnp.einsum("bsh,hd->bsd", out, p["wo"].astype(ct))
+    if "norm_post" in p:
+        out = norm_apply(out, p["norm_post"], cfg)
+    return out, new_cache
+
+
+def attn_cache_init(cfg, batch, max_len, dtype=jnp.bfloat16, window=None):
+    eff = min(max_len, window) if window else max_len
+    shape = (batch, cfg.n_kv_heads, eff, cfg.hd)
+    if cfg.kv_quant and not window:
+        return {"k": jnp.zeros(shape, jnp.int8),
+                "v": jnp.zeros(shape, jnp.int8),
+                "k_scale": jnp.zeros(shape[:-1] + (1,), jnp.float32),
+                "v_scale": jnp.zeros(shape[:-1] + (1,), jnp.float32)}
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+# ------------------------------------------------------------------ FFN
+
+def ffn_init(key, cfg):
+    d, ff = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    dt = pdtype(cfg)
+    std = 0.02
+    p = {"norm": norm_init(cfg)}
+    if cfg.act.endswith("_glu"):
+        p["w_gate"] = normal_init(ks[0], (d, ff), std, dt)
+        p["w_up"] = normal_init(ks[1], (d, ff), std, dt)
+    else:
+        p["w_up"] = normal_init(ks[1], (d, ff), std, dt)
+    p["w_down"] = normal_init(ks[2], (ff, d), std / np.sqrt(2 * cfg.n_layers), dt)
+    if cfg.post_norm:
+        p["norm_post"] = norm_init(cfg)
+    return p
+
+
+def _act(cfg, g):
+    if cfg.act.startswith("silu"):
+        return jax.nn.silu(g)
+    if cfg.act.startswith("gelu"):
+        return jax.nn.gelu(g)
+    return jax.nn.relu(g)
+
+
+def ffn_apply(p, x, cfg):
+    ct = cdtype(cfg)
+    h = norm_apply(x, p["norm"], cfg)
+    up = jnp.einsum("bsd,df->bsf", h, p["w_up"].astype(ct))
+    if "w_gate" in p:
+        gate = jnp.einsum("bsd,df->bsf", h, p["w_gate"].astype(ct))
+        mid = _act(cfg, gate) * up
+    else:
+        mid = _act(cfg, up)
+    mid = logical_constraint(mid, "batch", "seq_noshard", "ffn")
+    out = jnp.einsum("bsf,fd->bsd", mid, p["w_down"].astype(ct))
+    if "norm_post" in p:
+        out = norm_apply(out, p["norm_post"], cfg)
+    return out

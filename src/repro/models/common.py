@@ -1,0 +1,110 @@
+"""Shared layer primitives: norms, RoPE, inits, chunked cross-entropy."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def cdtype(cfg) -> jnp.dtype:
+    return jnp.dtype(cfg.dtype)
+
+
+def pdtype(cfg) -> jnp.dtype:
+    return jnp.dtype(cfg.param_dtype)
+
+
+def normal_init(key, shape, std, dtype=jnp.float32):
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def rmsnorm(x: jnp.ndarray, scale: jnp.ndarray, eps: float) -> jnp.ndarray:
+    """Memory-lean RMSNorm: the variance accumulates in f32 through the
+    einsum WITHOUT materializing an f32 copy of x (hillclimb §Perf:
+    the f32 casts were ~1.6 GB per call on the 4k-train cells)."""
+    d = x.shape[-1]
+    var = jnp.einsum("...d,...d->...", x, x,
+                     preferred_element_type=jnp.float32) / d
+    inv = jax.lax.rsqrt(var + eps)[..., None].astype(x.dtype)
+    return x * inv * (1.0 + scale).astype(x.dtype)
+
+
+def layernorm(x, scale, bias, eps):
+    d = x.shape[-1]
+    mu = jnp.mean(x, axis=-1, keepdims=True, dtype=jnp.float32)
+    e2 = jnp.einsum("...d,...d->...", x, x,
+                    preferred_element_type=jnp.float32)[..., None] / d
+    var = jnp.maximum(e2 - mu * mu, 0.0)
+    inv = jax.lax.rsqrt(var + eps)
+    out = (x - mu.astype(x.dtype)) * inv.astype(x.dtype)
+    return out * scale.astype(x.dtype) + bias.astype(x.dtype)
+
+
+def norm_apply(x, p, cfg):
+    if cfg.norm == "rmsnorm":
+        return rmsnorm(x, p["scale"], cfg.norm_eps)
+    return layernorm(x, p["scale"], p["bias"], cfg.norm_eps)
+
+
+def norm_init(cfg, dtype=jnp.float32):
+    if cfg.norm == "rmsnorm":
+        return {"scale": jnp.zeros((cfg.d_model,), dtype)}
+    return {"scale": jnp.ones((cfg.d_model,), dtype), "bias": jnp.zeros((cfg.d_model,), dtype)}
+
+
+def softcap(x: jnp.ndarray, cap: float | None) -> jnp.ndarray:
+    if cap is None:
+        return x
+    return jnp.tanh(x / cap) * cap
+
+
+# ----------------------------------------------------------------- RoPE
+
+def rope_freqs(head_dim: int, theta: float) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2, dtype=np.float64) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, D). positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(d, theta), jnp.float32)
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (..., S, D/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------- chunked cross-entropy
+
+def chunked_xent(hidden, w_lm, labels, mask, chunk: int = 1024,
+                 final_cap: float | None = None):
+    """Causal-LM loss without ever materializing (T, vocab) logits.
+
+    hidden: (B, S, d) bf16; w_lm: (d, V); labels/mask: (B, S).
+    The scan chunks the sequence axis; inside a chunk we compute logits,
+    logsumexp and the gathered label logit in f32, then discard.
+    """
+    b, s, d = hidden.shape
+    n_chunks = s // chunk if s % chunk == 0 else 1
+    if s % chunk != 0:
+        chunk = s
+    h = hidden.reshape(b, n_chunks, chunk, d).swapaxes(0, 1)
+    y = labels.reshape(b, n_chunks, chunk).swapaxes(0, 1)
+    m = mask.reshape(b, n_chunks, chunk).swapaxes(0, 1)
+
+    @jax.checkpoint  # recompute chunk logits in backward: never keeps
+    def body(carry, xs):  # more than one (chunk, vocab) slab live
+        tot, cnt = carry
+        hc, yc, mc = xs
+        logits = jnp.einsum("btd,dv->btv", hc, w_lm.astype(hc.dtype),
+                            preferred_element_type=jnp.float32)
+        logits = softcap(logits, final_cap)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, yc[..., None].astype(jnp.int32), axis=-1)[..., 0]
+        nll = (lse - ll) * mc
+        return (tot + jnp.sum(nll, dtype=jnp.float32),
+                cnt + jnp.sum(mc, dtype=jnp.float32)), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.float32(0), jnp.float32(0)), (h, y, m))
+    return tot / jnp.maximum(cnt, 1.0)

@@ -1,0 +1,58 @@
+"""Input specs + dummy batches for every (arch x shape) cell.
+
+`input_specs` returns ShapeDtypeStructs (no allocation — the dry-run
+contract); `dummy_batch` materializes small real arrays for smoke tests.
+Modality frontends are stubs per the brief: hubert gets precomputed
+frame embeddings, llava gets precomputed patch embeddings.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+
+
+def train_batch_specs(cfg: ModelConfig, batch: int, seq: int) -> dict:
+    f = jax.ShapeDtypeStruct
+    if cfg.input_kind == "frames":
+        return {
+            "frames": f((batch, seq, cfg.d_model), jnp.bfloat16),
+            "labels": f((batch, seq), jnp.int32),
+            "mask": f((batch, seq), jnp.float32),
+        }
+    if cfg.input_kind == "tokens+image":
+        txt = seq - cfg.n_image_tokens
+        return {
+            "tokens": f((batch, txt), jnp.int32),
+            "image_embeds": f((batch, cfg.n_image_tokens, cfg.d_model), jnp.bfloat16),
+            "labels": f((batch, txt), jnp.int32),
+            "mask": f((batch, txt), jnp.float32),
+        }
+    return {
+        "tokens": f((batch, seq), jnp.int32),
+        "labels": f((batch, seq), jnp.int32),
+        "mask": f((batch, seq), jnp.float32),
+    }
+
+
+def decode_token_specs(cfg: ModelConfig, batch: int) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct((batch,), jnp.int32)
+
+
+def dummy_batch(cfg: ModelConfig, batch: int, seq: int, seed: int = 0) -> dict:
+    rng = np.random.default_rng(seed)
+    specs = train_batch_specs(cfg, batch, seq)
+    out = {}
+    for k, s in specs.items():
+        if k in ("tokens", "labels"):
+            out[k] = jnp.asarray(
+                rng.integers(0, cfg.vocab, s.shape).astype(np.int32)
+            )
+        elif k == "mask":
+            out[k] = jnp.ones(s.shape, jnp.float32)
+        else:
+            out[k] = jnp.asarray(rng.standard_normal(s.shape).astype(np.float32) * 0.02,
+                                 jnp.bfloat16)
+    return out

@@ -1,0 +1,177 @@
+"""Mamba2 / SSD mixer (zamba2 backbone), chunked-scan formulation.
+
+Training/prefill use the block-matrix "chunked dual" form (Dao & Gu,
+arXiv:2405.21060): within a chunk the output is a masked (B C^T)-style
+matmul; across chunks a small recurrent state (B, H, P, N) is scanned.
+Decode is the O(1) recurrence — no KV growth, which is what makes the
+zamba2/rwkv long_500k cells runnable.
+
+Dims: d_inner = expand * d_model = H * P heads; state N = cfg.ssm_state;
+scalar decay A per head (SSD restriction); depthwise conv over x/B/C.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import cdtype, norm_init, norm_apply, normal_init, pdtype
+
+CHUNK = 128
+
+
+def dims(cfg):
+    d_in = cfg.ssm_expand * cfg.d_model
+    n_heads = d_in // cfg.ssm_head_dim
+    return d_in, n_heads, cfg.ssm_head_dim, cfg.ssm_state
+
+
+def mamba2_init(key, cfg):
+    d = cfg.d_model
+    d_in, h, p_, n = dims(cfg)
+    conv_ch = d_in + 2 * n  # conv over x, B, C
+    ks = jax.random.split(key, 5)
+    dt = pdtype(cfg)
+    return {
+        "norm": norm_init(cfg),
+        # projects to [z, x, B, C, dt]
+        "w_in": normal_init(ks[0], (d, 2 * d_in + 2 * n + h), 0.02, dt),
+        "conv_w": normal_init(ks[1], (cfg.ssm_conv, conv_ch), 0.02, dt),
+        "conv_b": jnp.zeros((conv_ch,), dt),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, h, dtype=jnp.float32)),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "out_norm": {"scale": jnp.zeros((d_in,), dt)},
+        "w_out": normal_init(ks[2], (d_in, d), 0.02 / np.sqrt(2 * cfg.n_layers), dt),
+    }
+
+
+def _split_proj(proj, cfg):
+    d_in, h, p_, n = dims(cfg)
+    z, xbc, dt_ = jnp.split(proj, [d_in, 2 * d_in + 2 * n], axis=-1)
+    return z, xbc, dt_
+
+
+def _causal_conv(xbc, w, b, state=None):
+    """Depthwise causal conv1d. xbc: (B, S, C). state: (B, K-1, C)."""
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((xbc.shape[0], k - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = state.astype(xbc.dtype)
+    xp = jnp.concatenate([pad, xbc], axis=1)
+    out = sum(xp[:, i : i + xbc.shape[1]] * w[i] for i in range(k)) + b
+    new_state = xp[:, -(k - 1) :] if k > 1 else None
+    return jax.nn.silu(out), new_state
+
+
+def _ssd_chunked(xh, bt, ct_, dt_a, dt_x_scale, h0):
+    """Chunked SSD scan.
+
+    xh: (B, S, H, P) inputs (already dt-scaled), bt/ct_: (B, S, N),
+    dt_a: (B, S, H) = dt * A (negative), h0: (B, H, P, N) initial state.
+    Returns (y (B,S,H,P), h_final).
+    """
+    b, s, h, p_ = xh.shape
+    n = bt.shape[-1]
+    nc = s // CHUNK if s % CHUNK == 0 else 1
+    ck = s // nc
+
+    xh = xh.reshape(b, nc, ck, h, p_)
+    bt = bt.reshape(b, nc, ck, n)
+    ct_ = ct_.reshape(b, nc, ck, n)
+    da = dt_a.reshape(b, nc, ck, h)
+
+    cum = jnp.cumsum(da, axis=2)                      # (B, nc, ck, H)
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,nc,t,s,H)
+    causal = jnp.tril(jnp.ones((ck, ck), bool))
+    # mask BEFORE exp: exp of masked (positive) entries overflows and
+    # poisons the backward pass with 0*inf = NaN
+    seg = jnp.where(causal[None, None, :, :, None], seg, -jnp.inf)
+    l_mat = jnp.exp(seg)
+
+    # intra-chunk: y[t] = sum_s<=t C_t.B_s L_ts x_s
+    cb = jnp.einsum("bctn,bcsn->bcts", ct_, bt)       # (B,nc,t,s)
+    y_intra = jnp.einsum("bcts,bctsh,bcshp->bcthp", cb, l_mat, xh)
+
+    # chunk-final states: sum_s decay(end, s) B_s x_s
+    decay_end = jnp.exp(cum[:, :, -1:, :] - cum)      # (B,nc,ck,H)
+    states = jnp.einsum("bcsn,bcsh,bcshp->bchpn", bt, decay_end, xh)
+
+    # inter-chunk recurrence over nc
+    chunk_decay = jnp.exp(cum[:, :, -1, :])           # (B,nc,H)
+
+    def scan_fn(hprev, xs):
+        st, dec = xs  # (B,H,P,N), (B,H)
+        hnew = hprev * dec[:, :, None, None] + st
+        return hnew, hprev
+
+    st_sw = jnp.moveaxis(states, 1, 0)
+    dec_sw = jnp.moveaxis(chunk_decay, 1, 0)
+    h_final, h_prevs = jax.lax.scan(scan_fn, h0, (st_sw, dec_sw))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)             # (B,nc,H,P,N)
+
+    # inter-chunk contribution: C_t decay(t,start) h_prev
+    decay_in = jnp.exp(cum)                           # (B,nc,ck,H)
+    y_inter = jnp.einsum("bctn,bcth,bchpn->bcthp", ct_, decay_in, h_prevs)
+    y = (y_intra + y_inter).reshape(b, s, h, p_)
+    return y, h_final
+
+
+def mamba2_apply(p, x, cfg, cache=None):
+    """x: (B,S,d). cache: None | {conv, ssm}. Returns (out, new_cache)."""
+    b, s, d = x.shape
+    d_in, h, p_, n = dims(cfg)
+    ct = cdtype(cfg)
+    res = norm_apply(x, p["norm"], cfg)
+    proj = jnp.einsum("bsd,de->bse", res, p["w_in"].astype(ct))
+    z, xbc, dtp = _split_proj(proj, cfg)
+
+    conv_state = cache["conv"] if cache is not None else None
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"].astype(ct), p["conv_b"].astype(ct),
+                                 conv_state)
+    xs, bt, ct_ = jnp.split(xbc, [d_in, d_in + n], axis=-1)
+
+    dt_ = jax.nn.softplus(dtp.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    a = -jnp.exp(p["a_log"])                                       # (H,)
+    dt_a = dt_ * a
+
+    xh = xs.reshape(b, s, h, p_).astype(jnp.float32)
+    xh_dt = xh * dt_[..., None]
+    h0 = (cache["ssm"] if cache is not None
+          else jnp.zeros((b, h, p_, n), jnp.float32))
+
+    if s == 1:  # decode: pure recurrence
+        dec = jnp.exp(dt_a[:, 0])                                  # (B,H)
+        st = jnp.einsum("bn,bhp->bhpn", bt[:, 0].astype(jnp.float32), xh_dt[:, 0])
+        h1 = h0 * dec[:, :, None, None] + st
+        y = jnp.einsum("bn,bhpn->bhp", ct_[:, 0].astype(jnp.float32), h1)[:, None]
+        y = y.reshape(b, 1, h, p_)
+        h_final = h1
+    else:
+        y, h_final = _ssd_chunked(
+            xh_dt, bt.astype(jnp.float32), ct_.astype(jnp.float32), dt_a, None, h0
+        )
+
+    y = y + xh * p["d_skip"][None, None, :, None]
+    y = y.reshape(b, s, d_in).astype(ct)
+    # gated RMSNorm (mamba2's out norm)
+    y = y * jax.nn.silu(z)
+    yf = y.astype(jnp.float32)
+    y = (yf * jax.lax.rsqrt(jnp.mean(yf * yf, -1, keepdims=True) + 1e-5)
+         * (1.0 + p["out_norm"]["scale"].astype(jnp.float32))).astype(ct)
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"].astype(ct))
+    new_cache = None
+    if cache is not None:
+        new_cache = {"conv": new_conv.astype(cache["conv"].dtype),
+                     "ssm": h_final}
+    return out, new_cache
+
+
+def mamba2_cache_init(cfg, batch):
+    d_in, h, p_, n = dims(cfg)
+    conv_ch = d_in + 2 * n
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_ch), jnp.bfloat16),
+        "ssm": jnp.zeros((batch, h, p_, n), jnp.float32),
+    }

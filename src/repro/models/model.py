@@ -1,0 +1,301 @@
+"""Model assembly: embeddings -> scanned block groups -> loss/decode.
+
+Layer stacking: cfg.pattern defines a *group* of block kinds; params for
+each pattern slot are stacked over n_groups = n_layers // len(pattern)
+and the group is lax.scan'd with remat (keeps 132B HLOs compilable and
+bounds activation memory).  `tail` holds the n_layers % len(pattern)
+leftover blocks (zamba2's 38 = 6x6 + 2).  A `shared` attention+FFN block
+(zamba2) executes at the start of every group with shared weights but
+per-invocation KV caches.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..distributed.sharding import logical_constraint
+from . import blocks, mamba2, moe as moe_mod, rwkv6
+from .common import cdtype, chunked_xent, norm_apply, norm_init, normal_init, pdtype
+from .config import ModelConfig
+
+
+# --------------------------------------------------------------- params
+
+def _block_init(key, cfg, kind: str):
+    if kind in ("attn", "attn_local"):
+        k1, k2 = jax.random.split(key)
+        p = {"attn": blocks.attn_init(k1, cfg)}
+        if cfg.moe is not None:
+            p["moe"] = moe_mod.moe_init(k2, cfg)
+        else:
+            p["ffn"] = blocks.ffn_init(k2, cfg)
+        return p
+    if kind == "mamba2":
+        return {"mamba": mamba2.mamba2_init(key, cfg)}
+    if kind == "rwkv6":
+        return {"rwkv": rwkv6.rwkv6_init(key, cfg)}
+    raise ValueError(kind)
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    pattern = cfg.pattern
+    n_groups = cfg.n_layers // len(pattern)
+    tail = cfg.n_layers % len(pattern)
+    keys = jax.random.split(key, 8)
+    p: dict = {}
+
+    p["embed"] = normal_init(keys[0], (cfg.vocab, cfg.d_model), 0.02, pdtype(cfg))
+    if cfg.input_kind == "tokens+image":
+        p["img_proj"] = normal_init(keys[5], (cfg.d_model, cfg.d_model), 0.02, pdtype(cfg))
+
+    def stack_slot(slot, kind, base_key):
+        ks = jax.random.split(base_key, n_groups)
+        return jax.vmap(lambda k: _block_init(k, cfg, kind))(ks)
+
+    p["groups"] = {
+        f"slot{i}": stack_slot(i, kind, jax.random.fold_in(keys[1], i))
+        for i, kind in enumerate(pattern)
+    }
+    if tail:
+        p["tail"] = [
+            _block_init(jax.random.fold_in(keys[2], i), cfg, pattern[i % len(pattern)])
+            for i in range(tail)
+        ]
+    if _has_shared(cfg):
+        k1, k2 = jax.random.split(keys[3])
+        p["shared"] = {"attn": blocks.attn_init(k1, cfg),
+                       "ffn": blocks.ffn_init(k2, cfg)}
+    p["final_norm"] = norm_init(cfg)
+    if not cfg.tie_embeddings and not cfg.encoder_only:
+        p["lm_head"] = normal_init(keys[4], (cfg.d_model, cfg.vocab), 0.02, pdtype(cfg))
+    if cfg.encoder_only:
+        p["lm_head"] = normal_init(keys[4], (cfg.d_model, cfg.vocab), 0.02, pdtype(cfg))
+    return p
+
+
+def _has_shared(cfg: ModelConfig) -> bool:
+    return any(k == "mamba2" for k in cfg.pattern) and cfg.uses_attention is False \
+        and cfg.name.startswith("zamba")
+
+
+# --------------------------------------------------------------- caches
+
+def _block_cache(cfg, kind, batch, max_len):
+    if kind in ("attn", "attn_local"):
+        window = cfg.window if (kind == "attn_local" and cfg.window) else None
+        return {"attn": blocks.attn_cache_init(cfg, batch, max_len, window=window)}
+    if kind == "mamba2":
+        return {"mamba": mamba2.mamba2_cache_init(cfg, batch)}
+    if kind == "rwkv6":
+        return {"rwkv": rwkv6.rwkv6_cache_init(cfg, batch)}
+    raise ValueError(kind)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    pattern = cfg.pattern
+    n_groups = cfg.n_layers // len(pattern)
+    tail = cfg.n_layers % len(pattern)
+
+    def stacked(kind):
+        one = _block_cache(cfg, kind, batch, max_len)
+        return jax.tree.map(lambda x: jnp.broadcast_to(x, (n_groups,) + x.shape), one)
+
+    cache: dict = {
+        "groups": {f"slot{i}": stacked(kind) for i, kind in enumerate(pattern)},
+        "len": jnp.zeros((), jnp.int32),
+    }
+    if tail:
+        cache["tail"] = [
+            _block_cache(cfg, pattern[i % len(pattern)], batch, max_len)
+            for i in range(tail)
+        ]
+    if _has_shared(cfg):
+        one = {"attn": blocks.attn_cache_init(cfg, batch, max_len, window=cfg.window)}
+        cache["shared"] = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (n_groups,) + x.shape), one
+        )
+    return cache
+
+
+# --------------------------------------------------------------- blocks
+
+def _apply_block(bp, h, cfg, kind, cache, q_offset):
+    """Residual-applied single block. Returns (h, new_cache, aux)."""
+    aux = jnp.float32(0)
+    rs = jnp.asarray(cfg.residual_scale, h.dtype)  # keep compute dtype
+    if kind in ("attn", "attn_local"):
+        window = cfg.window if kind == "attn_local" else None
+        a_cache = cache["attn"] if cache is not None else None
+        delta, new_a = blocks.attn_apply(bp["attn"], h, cfg, window=window,
+                                         cache=a_cache, q_offset=q_offset)
+        h = h + rs * delta
+        h = logical_constraint(h, "batch", "seq", "embed")
+        if "moe" in bp:
+            delta, aux = moe_mod.moe_apply(bp["moe"], h, cfg)
+        else:
+            delta = blocks.ffn_apply(bp["ffn"], h, cfg)
+        h = h + rs * delta
+        new_cache = {"attn": new_a} if cache is not None else None
+    elif kind == "mamba2":
+        m_cache = cache["mamba"] if cache is not None else None
+        delta, new_m = mamba2.mamba2_apply(bp["mamba"], h, cfg, cache=m_cache)
+        h = h + rs * delta
+        new_cache = {"mamba": new_m} if cache is not None else None
+    elif kind == "rwkv6":
+        r_cache = cache["rwkv"] if cache is not None else None
+        delta, new_r = rwkv6.rwkv6_apply(bp["rwkv"], h, cfg, cache=r_cache)
+        h = h + rs * delta
+        new_cache = {"rwkv": new_r} if cache is not None else None
+    else:  # pragma: no cover
+        raise ValueError(kind)
+    h = logical_constraint(h, "batch", "seq", "embed")
+    return h, new_cache, aux
+
+
+def _apply_shared(sp, h, cfg, cache, q_offset):
+    # zamba2 shared block; honors cfg.window when a serve config sets one
+    # (the documented long_500k adaptation in DESIGN.md).
+    delta, new_a = blocks.attn_apply(sp["attn"], h, cfg, window=cfg.window,
+                                     cache=cache["attn"] if cache else None,
+                                     q_offset=q_offset)
+    h = h + delta
+    delta = blocks.ffn_apply(sp["ffn"], h, cfg)
+    h = h + delta
+    return h, ({"attn": new_a} if cache is not None else None)
+
+
+# --------------------------------------------------------------- forward
+
+def forward_hidden(params, h, cfg: ModelConfig, caches=None, q_offset=0):
+    """h: (B, S, d) embedded inputs. Returns (hidden, new_caches, aux)."""
+    pattern = cfg.pattern
+    has_shared = _has_shared(cfg)
+    use_cache = caches is not None
+
+    def group_body(h, xs):
+        gp, gc = xs
+        aux_total = jnp.float32(0)
+        new_gc: dict = {}
+        if has_shared:
+            h, new_sc = _apply_shared(shared_p, h,
+                                      cfg, gc.get("shared") if use_cache else None,
+                                      q_offset)
+            if use_cache:
+                new_gc["shared"] = new_sc
+        for i, kind in enumerate(pattern):
+            c = gc.get(f"slot{i}") if use_cache else None
+            h, nc, aux = _apply_block(gp[f"slot{i}"], h, cfg, kind, c, q_offset)
+            aux_total = aux_total + aux
+            if use_cache:
+                new_gc[f"slot{i}"] = nc
+        return h, (new_gc, aux_total)
+
+    shared_p = params.get("shared")
+    group_params = {k: v for k, v in params["groups"].items()}
+    group_caches: dict = {}
+    if use_cache:
+        group_caches = {k: v for k, v in caches["groups"].items()}
+        if has_shared:
+            group_caches["shared"] = caches["shared"]
+
+    xs = (group_params, group_caches)
+    # prevent_cse=True (default) wraps the remat boundary in
+    # optimization barriers; without them XLA saves the *f32-converted*
+    # boundary activations across scan iterations (5.6GB vs 2.8GB)
+    body = jax.checkpoint(group_body)
+    h, (new_group_caches, auxs) = jax.lax.scan(body, h, xs)
+    aux = jnp.sum(auxs)
+
+    new_caches = None
+    if use_cache:
+        new_caches = {"groups": {k: v for k, v in new_group_caches.items()
+                                 if k != "shared"},
+                      "len": caches["len"] + h.shape[1]}
+        if has_shared:
+            new_caches["shared"] = new_group_caches["shared"]
+
+    # tail blocks (unscanned)
+    if "tail" in params:
+        new_tail = []
+        for i, bp in enumerate(params["tail"]):
+            kind = pattern[i % len(pattern)]
+            c = caches["tail"][i] if use_cache else None
+            h, nc, aux_t = _apply_block(bp, h, cfg, kind, c, q_offset)
+            aux = aux + aux_t
+            new_tail.append(nc)
+        if use_cache:
+            new_caches["tail"] = new_tail
+
+    h = norm_apply(h, params["final_norm"], cfg)
+    return h, new_caches, aux
+
+
+def embed_inputs(params, batch, cfg: ModelConfig):
+    ct = cdtype(cfg)
+    if cfg.input_kind == "frames":
+        h = batch["frames"].astype(ct)
+    elif cfg.input_kind == "tokens+image":
+        img = jnp.einsum("btd,de->bte", batch["image_embeds"].astype(ct),
+                         params["img_proj"].astype(ct))
+        tok = params["embed"].astype(ct)[batch["tokens"]]
+        h = jnp.concatenate([img, tok], axis=1)
+    else:
+        h = params["embed"].astype(ct)[batch["tokens"]]
+    return h * jnp.asarray(cfg.embed_scale, ct)
+
+
+def lm_head_weight(params, cfg):
+    if cfg.tie_embeddings:
+        return params["embed"].T
+    return params["lm_head"]
+
+
+def train_loss(params, batch, cfg: ModelConfig):
+    """Returns (loss, metrics). Labels predict batch['labels'][t] from h[t]."""
+    h = embed_inputs(params, batch, cfg)
+    h = logical_constraint(h, "batch", "seq", "embed")
+    h, _, aux = forward_hidden(params, h, cfg)
+    labels = batch["labels"]
+    mask = batch.get("mask")
+    if mask is None:
+        mask = jnp.ones(labels.shape, jnp.float32)
+    if cfg.input_kind == "tokens+image":
+        # hidden includes image positions first; loss only on text tail
+        h = h[:, -labels.shape[1]:]
+    xe = chunked_xent(h, lm_head_weight(params, cfg).astype(cdtype(cfg)), labels,
+                      mask.astype(jnp.float32), final_cap=cfg.final_softcap)
+    loss = xe
+    metrics = {"xent": xe}
+    if cfg.moe is not None:
+        loss = loss + cfg.moe.aux_loss_weight * aux
+        metrics["moe_aux"] = aux
+    return loss, metrics
+
+
+def prefill(params, batch, cfg: ModelConfig, max_len: int):
+    """Run the prompt through the model, filling caches.
+
+    Returns (last_token_logits, caches)."""
+    h = embed_inputs(params, batch, cfg)
+    b = h.shape[0]
+    caches = init_cache(cfg, b, max_len)
+    h, caches, _ = forward_hidden(params, h, cfg, caches=caches, q_offset=0)
+    logits = jnp.einsum("bd,dv->bv", h[:, -1].astype(jnp.float32),
+                        lm_head_weight(params, cfg).astype(jnp.float32))
+    from .common import softcap as _sc
+    return _sc(logits, cfg.final_softcap), caches
+
+
+def decode_step(params, token, caches, cfg: ModelConfig):
+    """One serving step: token (B,) -> (logits (B, V), new caches)."""
+    ct = cdtype(cfg)
+    h = params["embed"].astype(ct)[token][:, None] * jnp.asarray(cfg.embed_scale, ct)
+    h, caches, _ = forward_hidden(params, h, cfg, caches=caches,
+                                  q_offset=caches["len"])
+    logits = jnp.einsum("bd,dv->bv", h[:, 0].astype(jnp.float32),
+                        lm_head_weight(params, cfg).astype(jnp.float32))
+    from .common import softcap as _sc
+    return _sc(logits, cfg.final_softcap), caches

@@ -1,0 +1,205 @@
+"""Mixture-of-Experts FFN (dbrx 16e top-4, mixtral 8e top-2).
+
+Dispatch is capacity-based and scatter/gather-shaped — the (T, E, C)
+one-hot einsum tensor is never built.  In distributed runs the block
+executes under shard_map: tokens stay sharded on the DP axes, experts
+are sharded on the model axis (EP), and two all_to_all collectives move
+token slots to/from their expert shards.  Per-shard capacity keeps every
+buffer O(T_local) — this is what makes the 132B dbrx cell fit.
+
+Single-device (smoke tests): the same local function runs directly with
+every expert resident.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..distributed.sharding import sharding_rules
+from .common import cdtype, norm_apply, norm_init, normal_init, pdtype
+
+
+def moe_init(key, cfg):
+    d, ff, e = cfg.d_model, cfg.d_ff, cfg.moe.n_experts
+    ks = jax.random.split(key, 4)
+    dt = pdtype(cfg)
+    std = 0.02
+    return {
+        "norm": norm_init(cfg),
+        "router": normal_init(ks[0], (d, e), std, jnp.float32),
+        "w_gate": normal_init(ks[1], (e, d, ff), std, dt),
+        "w_up": normal_init(ks[2], (e, d, ff), std, dt),
+        "w_down": normal_init(ks[3], (e, ff, d), std / np.sqrt(2 * cfg.n_layers), dt),
+    }
+
+
+def _act(cfg, g):
+    return jax.nn.silu(g) if cfg.act.startswith("silu") else jax.nn.gelu(g)
+
+
+def _local_moe(p, x_tokens, cfg, n_ep_shards: int, ep_axis: str | None):
+    """x_tokens: (T_loc, d) on this shard. Experts local or EP-sharded."""
+    t, d = x_tokens.shape
+    e = cfg.moe.n_experts
+    k = cfg.moe.top_k
+    ct = cdtype(cfg)
+
+    logits = jnp.einsum("td,de->te", x_tokens, p["router"].astype(ct),
+                        preferred_element_type=jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)            # (T, k)
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
+
+    # per-shard capacity (multiple of 8 for TPU-friendly shapes)
+    cap = int(np.ceil(t * k * cfg.moe.capacity_factor / e / 8.0)) * 8
+
+    # position of each (token, choice) within its expert's buffer
+    e_flat = top_e.reshape(-1)                         # (T*k,)
+    onehot = jax.nn.one_hot(e_flat, e, dtype=jnp.int32)
+    pos = jnp.cumsum(onehot, axis=0) - 1               # rank within expert
+    pos_flat = jnp.take_along_axis(pos, e_flat[:, None], axis=1)[:, 0]
+    pos_flat = jnp.where(pos_flat < cap, pos_flat, cap)  # cap -> dropped
+
+    # scatter tokens into (E*cap, d) via a single flat row index
+    # (advanced 2D indexing materializes O(T*k*d) index tensors)
+    tok_idx = jnp.repeat(jnp.arange(t, dtype=jnp.int32), k)
+    flat_idx = (e_flat.astype(jnp.int32) * (cap + 1)
+                + jnp.minimum(pos_flat, cap).astype(jnp.int32))
+    buf = jnp.zeros((e * (cap + 1), d), ct)
+    buf = buf.at[flat_idx].set(x_tokens.astype(ct)[tok_idx], mode="drop")
+    # slot cap of each expert is the drop bucket; slice it away
+    buf = buf.reshape(e, cap + 1, d)[:, :cap]
+
+    if ep_axis is not None and n_ep_shards > 1:
+        e_loc = e // n_ep_shards
+        # expert groups scatter to their EP shard; token slots from every
+        # peer concatenate along the capacity axis:
+        # (e, cap, d) -> (e_loc, n_shards*cap, d)
+        buf = jax.lax.all_to_all(buf, ep_axis, split_axis=0, concat_axis=1,
+                                 tiled=True)
+    else:
+        e_loc = e
+
+    gate = jnp.einsum("ecd,edf->ecf", buf, p["w_gate"].astype(ct))
+    up = jnp.einsum("ecd,edf->ecf", buf, p["w_up"].astype(ct))
+    out = jnp.einsum("ecf,efd->ecd", _act(cfg, gate) * up, p["w_down"].astype(ct))
+
+    if ep_axis is not None and n_ep_shards > 1:
+        # inverse: capacity blocks return to their token shard
+        # (e_loc, n_shards*cap, d) -> (e, cap, d)
+        out = jax.lax.all_to_all(out, ep_axis, split_axis=1, concat_axis=0,
+                                 tiled=True)
+
+    # gather back + weighted combine (flat row gather; dropped slots 0)
+    out = jnp.concatenate([out, jnp.zeros((e, 1, d), out.dtype)], axis=1)
+    gathered = out.reshape(e * (cap + 1), d)[flat_idx]
+    combined = jnp.sum(
+        gathered.reshape(t, k, d) * top_p.astype(ct)[..., None], axis=1
+    )
+
+    # load-balance aux loss (GShard): E * sum_e f_e * P_e
+    frac = jnp.mean(jax.nn.one_hot(top_e, e, dtype=jnp.float32), axis=(0, 1))
+    mean_p = jnp.mean(probs, axis=0)
+    aux = jnp.float32(e) * jnp.sum(frac * mean_p)
+    return combined, aux
+
+
+def _local_moe_xp(p, x_tokens, cfg, ep_axis: str | None):
+    """Expert-TP variant for E < |model| (mixtral 8e on a 16-wide axis):
+    every shard holds ALL experts but only a d_ff slice; no all_to_all —
+    partial down-projections are combined with one psum over the model
+    axis (the combine is linear, so psum after gather+mix is exact)."""
+    t, d = x_tokens.shape
+    e, k = cfg.moe.n_experts, cfg.moe.top_k
+    ct = cdtype(cfg)
+
+    logits = jnp.einsum("td,de->te", x_tokens, p["router"].astype(ct),
+                        preferred_element_type=jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
+
+    cap = int(np.ceil(t * k * cfg.moe.capacity_factor / e / 8.0)) * 8
+    e_flat = top_e.reshape(-1)
+    onehot = jax.nn.one_hot(e_flat, e, dtype=jnp.int32)
+    pos = jnp.cumsum(onehot, axis=0) - 1
+    pos_flat = jnp.take_along_axis(pos, e_flat[:, None], axis=1)[:, 0]
+    pos_flat = jnp.where(pos_flat < cap, pos_flat, cap)
+    # flat row scatter (see _local_moe): slot `cap` is the drop bucket
+    tok_idx = jnp.repeat(jnp.arange(t, dtype=jnp.int32), k)
+    flat_idx = (e_flat.astype(jnp.int32) * (cap + 1)
+                + jnp.minimum(pos_flat, cap).astype(jnp.int32))
+    buf = jnp.zeros((e * (cap + 1), d), ct)
+    buf = buf.at[flat_idx].set(x_tokens.astype(ct)[tok_idx], mode="drop")
+    buf = buf.reshape(e, cap + 1, d)[:, :cap]
+
+    gate = jnp.einsum("ecd,edf->ecf", buf, p["w_gate"].astype(ct))
+    up = jnp.einsum("ecd,edf->ecf", buf, p["w_up"].astype(ct))
+    out = jnp.einsum("ecf,efd->ecd", _act(cfg, gate) * up, p["w_down"].astype(ct))
+
+    out = jnp.concatenate([out, jnp.zeros((e, 1, d), out.dtype)], axis=1)
+    gathered = out.reshape(e * (cap + 1), d)[flat_idx]
+    combined = jnp.sum(gathered.reshape(t, k, d) * top_p.astype(ct)[..., None], axis=1)
+    if ep_axis is not None:
+        combined = jax.lax.psum(combined, ep_axis)  # join d_ff partials
+
+    frac = jnp.mean(jax.nn.one_hot(top_e, e, dtype=jnp.float32), axis=(0, 1))
+    aux = jnp.float32(e) * jnp.sum(frac * jnp.mean(probs, axis=0))
+    return combined, aux
+
+
+def moe_apply(p, x, cfg):
+    """x: (B, S, d) -> (out, aux_loss). shard_map'd when a mesh is set.
+
+    Two distributed modes (DESIGN.md §5):
+      EP: E %% |model| == 0 -> experts sharded, token slots all_to_all'd.
+      XP: otherwise -> experts replicated with d_ff sliced over 'model'
+          (expert tensor parallelism), one psum, no all_to_all.
+    """
+    b, s, d = x.shape
+    r = sharding_rules()
+    h = norm_apply(x, p["norm"], cfg)
+
+    if r is None or r.mesh is None or r.ep_axis is None:
+        out, aux = _local_moe(p, h.reshape(b * s, d), cfg, 1, None)
+        return out.reshape(b, s, d), aux
+
+    from jax.sharding import PartitionSpec as P
+    from jax.experimental.shard_map import shard_map
+
+    mesh = r.mesh
+    ep = r.ep_axis
+    n_ep = mesh.shape[ep]
+    # drop DP axes that do not divide the batch (decode, global_batch=1)
+    dp = tuple(a for a in r.dp_axes)
+    dp_size = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+    if dp_size > 1 and b % dp_size != 0:
+        dp = ()
+    ep_mode = cfg.moe.n_experts % n_ep == 0
+    seq_spec = ep if (ep_mode and s % n_ep == 0) else None
+
+    pspecs = jax.tree.map(lambda _: P(), p)
+    if ep_mode:
+        pspecs = {**pspecs, "w_gate": P(ep), "w_up": P(ep), "w_down": P(ep)}
+    else:
+        pspecs = {**pspecs, "w_gate": P(None, None, ep), "w_up": P(None, None, ep),
+                  "w_down": P(None, ep, None)}
+
+    def inner(p_loc, h_loc):
+        bl, sl, _ = h_loc.shape
+        flat = h_loc.reshape(bl * sl, d)
+        if ep_mode:
+            out, aux = _local_moe(p_loc, flat, cfg, n_ep, ep)
+        else:
+            out, aux = _local_moe_xp(p_loc, flat, cfg, ep)
+        aux = jax.lax.pmean(aux, (*dp, ep))
+        return out.reshape(bl, sl, d), aux
+
+    out, aux = shard_map(
+        inner, mesh=mesh,
+        in_specs=(pspecs, P(dp, seq_spec)),
+        out_specs=(P(dp, seq_spec), P()),
+        check_rep=False,
+    )(p, h)
+    return out, aux

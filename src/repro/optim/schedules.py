@@ -1,0 +1,35 @@
+"""LR schedules: cosine (default) and WSD (minicpm's warmup-stable-decay,
+arXiv:2404.06395 §4)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / jnp.maximum(warmup, 1)
+        t = (step - warmup) / jnp.maximum(total - warmup, 1)
+        t = jnp.clip(t, 0.0, 1.0)
+        cos = base_lr * 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup, warm, cos).astype(jnp.float32)
+
+    return lr
+
+
+def wsd_schedule(base_lr: float, warmup: int, total: int, decay_frac: float = 0.1,
+                 floor_frac: float = 0.1):
+    """Warmup -> stable plateau -> short exponential-ish decay tail."""
+    decay_start = int(total * (1.0 - decay_frac))
+
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / jnp.maximum(warmup, 1)
+        t = (step - decay_start) / jnp.maximum(total - decay_start, 1)
+        t = jnp.clip(t, 0.0, 1.0)
+        decay = base_lr * jnp.power(jnp.asarray(floor_frac, jnp.float32), t)
+        out = jnp.where(step < warmup, warm,
+                        jnp.where(step < decay_start, base_lr, decay))
+        return out.astype(jnp.float32)
+
+    return lr

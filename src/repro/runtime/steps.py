@@ -1,0 +1,85 @@
+"""Step functions: train (fwd+bwd+AdamW), prefill, decode.
+
+These are the units the dry-run lowers and the trainer executes. All are
+pure: (state, inputs) -> (state, outputs).  Gradient compression over
+the cross-pod axis is an optional wrapper (distributed/compression.py).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..models.config import ModelConfig
+from ..models.model import decode_step as _decode, init_cache, prefill as _prefill, train_loss
+from ..optim.adamw import adamw_init, adamw_update
+from ..optim.schedules import cosine_schedule, wsd_schedule
+
+
+def make_lr_schedule(cfg: ModelConfig, base_lr=3e-4, warmup=None, total=10_000):
+    if warmup is None:
+        warmup = max(1, min(200, total // 10))
+    if cfg.name.startswith("minicpm"):
+        return wsd_schedule(base_lr, warmup, total)
+    return cosine_schedule(base_lr, warmup, total)
+
+
+def make_train_step(cfg: ModelConfig, grad_transform: Callable | None = None,
+                    base_lr: float = 3e-4, total_steps: int = 10_000):
+    """Returns step(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    grad_transform: optional (grads -> grads) hook; the compressed
+    cross-pod all-reduce plugs in here.
+    """
+    schedule = make_lr_schedule(cfg, base_lr, total=total_steps)
+
+    def step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: train_loss(p, batch, cfg), has_aux=True
+        )(params)
+        if grad_transform is not None:
+            grads, opt_state = grad_transform(grads, opt_state)
+        params, opt_state, opt_metrics = adamw_update(
+            grads, opt_state, params, schedule
+        )
+        metrics = {**metrics, **opt_metrics, "loss": loss}
+        return params, opt_state, metrics
+
+    return step
+
+
+def init_train_state(cfg: ModelConfig, key):
+    from ..models.model import init_params
+
+    params = init_params(cfg, key)
+    return params, adamw_init(params)
+
+
+def make_prefill(cfg: ModelConfig, max_len: int):
+    def fn(params, batch):
+        return _prefill(params, batch, cfg, max_len)
+
+    return fn
+
+
+def make_decode_step(cfg: ModelConfig):
+    def fn(params, token, caches):
+        return _decode(params, token, caches, cfg)
+
+    return fn
+
+
+def make_encoder_forward(cfg: ModelConfig):
+    """hubert 'serving': encoder forward returning frame logits."""
+    from ..models.common import cdtype
+    from ..models.model import embed_inputs, forward_hidden, lm_head_weight
+
+    def fn(params, batch):
+        h = embed_inputs(params, batch, cfg)
+        h, _, _ = forward_hidden(params, h, cfg)
+        return jnp.einsum("bsd,dv->bsv", h,
+                          lm_head_weight(params, cfg).astype(cdtype(cfg)))
+
+    return fn

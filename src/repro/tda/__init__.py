@@ -1,0 +1,14 @@
+from .critpoints import (
+    classify_critical_points,
+    critical_point_errors,
+    local_order_violations,
+)
+from .quality import psnr, ssim
+
+__all__ = [
+    "classify_critical_points",
+    "critical_point_errors",
+    "local_order_violations",
+    "psnr",
+    "ssim",
+]

@@ -1,0 +1,51 @@
+"""Reconstruction quality metrics (paper Tables VIII/IX): PSNR + SSIM."""
+from __future__ import annotations
+
+import numpy as np
+
+
+def psnr(original: np.ndarray, reconstructed: np.ndarray) -> float:
+    o = np.asarray(original, np.float64)
+    r = np.asarray(reconstructed, np.float64)
+    rng = o.max() - o.min()
+    mse = np.mean((o - r) ** 2)
+    if mse == 0:
+        return float("inf")
+    return float(20.0 * np.log10(rng) - 10.0 * np.log10(mse))
+
+
+def _uniform_filter(x: np.ndarray, size: int) -> np.ndarray:
+    """Separable box filter (valid mode avoided: same-size via edge pad)."""
+    for ax in range(x.ndim):
+        pad = [(0, 0)] * x.ndim
+        pad[ax] = (size // 2, size - 1 - size // 2)
+        xp = np.pad(x, pad, mode="edge")
+        c = np.cumsum(xp, axis=ax, dtype=np.float64)
+        lead = [slice(None)] * x.ndim
+        lag = [slice(None)] * x.ndim
+        lead[ax] = slice(size, None)
+        lag[ax] = slice(None, -size)
+        zero = [slice(None)] * x.ndim
+        zero[ax] = slice(size - 1, size)
+        first = c[tuple(zero)]
+        x = np.concatenate([first, c[tuple(lead)] - c[tuple(lag)]], axis=ax) / size
+    return x
+
+
+def ssim(original: np.ndarray, reconstructed: np.ndarray, window: int = 7) -> float:
+    """Mean SSIM with a box window (scikit-image style constants)."""
+    o = np.asarray(original, np.float64)
+    r = np.asarray(reconstructed, np.float64)
+    rng = o.max() - o.min()
+    if rng == 0:
+        return 1.0
+    c1 = (0.01 * rng) ** 2
+    c2 = (0.03 * rng) ** 2
+    mu_o = _uniform_filter(o, window)
+    mu_r = _uniform_filter(r, window)
+    var_o = _uniform_filter(o * o, window) - mu_o**2
+    var_r = _uniform_filter(r * r, window) - mu_r**2
+    cov = _uniform_filter(o * r, window) - mu_o * mu_r
+    num = (2 * mu_o * mu_r + c1) * (2 * cov + c2)
+    den = (mu_o**2 + mu_r**2 + c1) * (var_o + var_r + c2)
+    return float(np.mean(num / den))

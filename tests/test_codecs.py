@@ -1,0 +1,134 @@
+"""Lossless stage roundtrips + oracles: delta/zigzag/BIT/RZE, host RZE_1,
+bitmap repeat elimination, full pipelines, container integrity."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.codecs import pipeline
+from repro.codecs.bitshuffle import bitshuffle, bitunshuffle, np_bitshuffle, np_bitunshuffle
+from repro.codecs.rze import (
+    np_repeat_eliminate,
+    np_repeat_restore,
+    np_rze_bytes,
+    np_unrze_bytes,
+    rze_decode,
+    rze_encode,
+)
+from repro.codecs.transforms import (
+    chunk,
+    delta_decode,
+    delta_encode,
+    unchunk,
+    zigzag_decode,
+    zigzag_encode,
+)
+from repro.core import bitstream
+
+
+@given(st.lists(st.integers(-(2**31), 2**31 - 1), min_size=1, max_size=200))
+def test_delta_zigzag_roundtrip_i32(vals):
+    x = jnp.asarray(np.array(vals, np.int32).reshape(1, -1))
+    d = delta_encode(x)
+    z = zigzag_encode(d)
+    assert z.dtype == jnp.uint32
+    back = delta_decode(zigzag_decode(z))
+    assert np.array_equal(np.asarray(back), np.asarray(x))
+
+
+@given(st.lists(st.integers(-(2**63), 2**63 - 1), min_size=1, max_size=64))
+def test_delta_zigzag_roundtrip_i64(vals):
+    x = jnp.asarray(np.array(vals, np.int64).reshape(2, -1) if len(vals) % 2 == 0
+                    else np.array(vals, np.int64).reshape(1, -1))
+    back = delta_decode(zigzag_decode(zigzag_encode(delta_encode(x))))
+    assert np.array_equal(np.asarray(back), np.asarray(x))
+
+
+@pytest.mark.parametrize("dtype,length", [(np.uint32, 128), (np.uint32, 4096),
+                                          (np.uint64, 128), (np.uint64, 2048)])
+def test_bitshuffle_roundtrip_and_oracle(rng, dtype, length):
+    words = rng.integers(0, np.iinfo(dtype).max, (3, length), dtype=dtype)
+    # make some chunks sparse in high bits (the real workload shape)
+    words[1] &= np.array(0xFF, dtype)
+    sh = np.asarray(bitshuffle(jnp.asarray(words)))
+    assert np.array_equal(sh, np_bitshuffle(words)), "jnp vs numpy oracle"
+    back = np.asarray(bitunshuffle(jnp.asarray(sh)))
+    assert np.array_equal(back, words)
+    assert np.array_equal(np_bitunshuffle(sh), words)
+
+
+def test_bitshuffle_groups_planes():
+    """All-words-identical chunk => every plane is constant 0/max."""
+    words = np.full((1, 128), 0x80000001, np.uint32)
+    sh = np.asarray(bitshuffle(jnp.asarray(words)))
+    per = 128 // 32
+    assert (sh[0, :per] == 0xFFFFFFFF).all()          # MSB plane
+    assert (sh[0, -per:] == 0xFFFFFFFF).all()         # LSB plane
+    assert (sh[0, per:-per] == 0).all()               # middle planes empty
+
+
+@pytest.mark.parametrize("dtype", [np.uint32, np.uint64])
+def test_rze_roundtrip(rng, dtype):
+    w = dtype(0).itemsize * 8
+    words = rng.integers(0, 100, (4, 4 * w), dtype=dtype)
+    words[words < 80] = 0  # mostly zero
+    bitmap, packed, counts = rze_encode(jnp.asarray(words))
+    assert np.array_equal(np.asarray(counts), (words != 0).sum(1))
+    back = np.asarray(rze_decode(bitmap, packed))
+    assert np.array_equal(back, words)
+
+
+@given(st.binary(min_size=0, max_size=500))
+def test_host_rze_bytes_roundtrip(data):
+    arr = np.frombuffer(data, np.uint8)
+    bitmap, nz = np_rze_bytes(arr)
+    assert np.array_equal(np_unrze_bytes(bitmap, nz, arr.size), arr)
+
+
+@given(st.lists(st.integers(0, 5), min_size=0, max_size=100))
+def test_repeat_eliminate_roundtrip(vals):
+    words = np.array(vals, np.uint32)
+    keepmap, kept = np_repeat_eliminate(words)
+    back = np_repeat_restore(keepmap, kept, words.size, np.uint32)
+    assert np.array_equal(back, words)
+
+
+@pytest.mark.parametrize("dtype", [np.int32, np.int64])
+@pytest.mark.parametrize("use_delta", [True, False])
+def test_full_pipeline_roundtrip(rng, dtype, use_delta):
+    for shape in [(7,), (33, 12), (1000,), (5000,)]:
+        ints = rng.integers(-50, 50, shape).astype(dtype)
+        payload = pipeline.encode_ints(jnp.asarray(ints), use_delta)
+        back = pipeline.decode_ints(payload, int(np.prod(shape)), shape, dtype, use_delta)
+        assert np.array_equal(back, ints), (dtype, use_delta, shape)
+
+
+def test_chunking_roundtrip(rng):
+    x = jnp.asarray(rng.integers(0, 9, 1000, dtype=np.int32))
+    c, n = chunk(x, 128)
+    assert c.shape == (8, 128)
+    assert np.array_equal(np.asarray(unchunk(c, n, (1000,))), np.asarray(x))
+
+
+def test_container_roundtrip_and_crc():
+    h = bitstream.Header(np.float32, (3, 4), "noa", 1e-2, 2.3e-2)
+    blob = bitstream.write_container(h, {1: b"abc", 2: b"\x00" * 10})
+    h2, secs = bitstream.read_container(blob)
+    assert (h2.dtype, h2.shape, h2.eb_mode) == (np.float32, (3, 4), "noa")
+    assert h2.eb == pytest.approx(1e-2)
+    assert secs == {1: b"abc", 2: b"\x00" * 10}
+    # corrupt one body byte -> crc must catch it
+    bad = bytearray(blob)
+    bad[-1] ^= 0xFF
+    with pytest.raises(ValueError, match="crc"):
+        bitstream.read_container(bytes(bad))
+
+
+def test_compressibility_sanity(rng):
+    """Near-constant small ints must compress hard (the subbin case)."""
+    sub = np.zeros(100_000, np.int32)
+    sub[rng.integers(0, 100_000, 500)] = 1
+    payload = pipeline.encode_subbins(jnp.asarray(sub))
+    assert len(payload) < sub.nbytes / 50

@@ -1,0 +1,98 @@
+"""Integration checks over the stored dry-run artifacts.
+
+The 80-cell sweep itself runs out-of-band (python -m repro.launch.dryrun
+--all — hours of compile time); these tests validate the persisted
+results satisfy the brief's contracts. Skipped when artifacts are absent
+(fresh checkout)."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+import pytest
+
+RESULTS = Path(__file__).resolve().parents[1] / "benchmarks" / "results" / "dryrun"
+
+ARCHS = ["starcoder2-15b", "qwen2.5-3b", "minicpm-2b", "gemma2-27b",
+         "dbrx-132b", "mixtral-8x22b", "zamba2-1.2b", "rwkv6-7b",
+         "hubert-xlarge", "llava-next-mistral-7b"]
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+pytestmark = pytest.mark.skipif(
+    not RESULTS.exists() or not list(RESULTS.glob("*.json")),
+    reason="dry-run artifacts not generated",
+)
+
+
+def _load():
+    recs = {}
+    for p in RESULTS.glob("*.json"):
+        arch, shape, mesh = p.stem.split("__")
+        recs[(arch, shape, mesh)] = json.loads(p.read_text())
+    return recs
+
+
+def test_every_cell_present_and_green():
+    recs = _load()
+    for arch in ARCHS:
+        for shape in SHAPES:
+            for mesh in ("single", "multi"):
+                rec = recs.get((arch, shape, mesh))
+                assert rec is not None, f"missing cell {arch}/{shape}/{mesh}"
+                assert rec["status"] in ("ok", "skipped"), (
+                    f"{arch}/{shape}/{mesh}: {rec['status']}: "
+                    f"{rec.get('error', '')[:200]}"
+                )
+
+
+def test_skips_are_documented_shape_skips():
+    """Every skip must be a shape skip with a reason; no arch skips."""
+    recs = _load()
+    for arch in ARCHS:
+        ok_shapes = [s for s in SHAPES
+                     if recs[(arch, s, "single")]["status"] == "ok"]
+        assert len(ok_shapes) >= 2, f"{arch} must run most shapes"
+        for s in SHAPES:
+            rec = recs[(arch, s, "single")]
+            if rec["status"] == "skipped":
+                assert rec["reason"], f"{arch}/{s} skip lacks a reason"
+    # the three sub-quadratic archs must RUN long_500k
+    for arch in ("rwkv6-7b", "zamba2-1.2b", "mixtral-8x22b"):
+        assert recs[(arch, "long_500k", "single")]["status"] == "ok"
+
+
+def test_roofline_terms_recorded():
+    recs = _load()
+    for rec in recs.values():
+        if rec["status"] != "ok":
+            continue
+        t = rec["roofline"]
+        assert set(t) == {"compute_s", "memory_s", "collective_s"}
+        assert all(v >= 0 for v in t.values())
+        assert rec["dominant"] in t
+        assert rec["flops_per_device"] > 0
+        assert rec["model_flops_total"] > 0
+
+
+def test_multi_pod_shards_the_pod_axis():
+    """2x the devices => per-device FLOPs roughly halve on train cells."""
+    recs = _load()
+    checked = 0
+    for arch in ARCHS:
+        single = recs[(arch, "train_4k", "single")]
+        multi = recs[(arch, "train_4k", "multi")]
+        if single["status"] != "ok" or multi["status"] != "ok":
+            continue
+        ratio = multi["flops_per_device"] / single["flops_per_device"]
+        assert 0.35 <= ratio <= 0.75, f"{arch}: multi/single flops {ratio:.2f}"
+        checked += 1
+    assert checked >= 8
+
+
+def test_memory_fits_v5e_for_headline_cells():
+    """Sharded params+opt+cache must fit a 16 GB chip for the giants."""
+    recs = _load()
+    for arch in ("dbrx-132b", "mixtral-8x22b", "gemma2-27b"):
+        rec = recs[(arch, "train_4k", "single")]
+        args = rec["memory"]["argument_size_in_bytes"]
+        assert args < 8e9, f"{arch}: {args / 1e9:.1f} GB of arguments/device"

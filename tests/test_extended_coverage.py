@@ -1,0 +1,119 @@
+"""Extended coverage: edge-case fields, the public blockwise solver
+path, FF32 pipeline properties, weight-matrix compression (beyond-paper
+framework feature), and paper-config constants."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import compress, decompress
+from repro.tda import critical_point_errors, local_order_violations
+
+from conftest import make_field
+
+
+@pytest.mark.parametrize("case", ["constant", "tiny_normals", "two_values",
+                                  "huge_range", "single_row"])
+def test_edge_case_fields(case):
+    if case == "constant":
+        x = np.full((12, 11, 10), 3.25)
+    elif case == "tiny_normals":
+        x = np.linspace(0, 1e-300, 1000).reshape(10, 100)
+    elif case == "two_values":
+        rng = np.random.default_rng(0)
+        x = rng.choice([0.0, 1e-9], size=(20, 20)).astype(np.float64)
+    elif case == "huge_range":
+        x = np.geomspace(1e-6, 1e6, 4096).reshape(64, 64)
+        x[::2] *= -1
+    else:
+        x = np.sin(np.arange(300.0))[None, :].repeat(1, 0)
+    blob = compress(x, 1e-3, "noa")
+    y = decompress(blob)
+    bound = 1e-3 * (x.max() - x.min() if x.max() > x.min() else 1.0)
+    assert np.abs(x - y).max() <= bound
+    assert local_order_violations(x, y) == 0
+    assert critical_point_errors(x, y) == (0, 0, 0)
+
+
+def test_public_blockwise_solver_path(rng):
+    """compress(solver='blockwise') routes through the Pallas kernel and
+    must produce byte-identical output to the jacobi schedule."""
+    x = make_field(rng, (18, 14, 12), np.float64)
+    assert compress(x, 1e-2, "noa", solver="blockwise") == \
+        compress(x, 1e-2, "noa", solver="jacobi")
+
+
+def test_weight_matrix_compression(rng):
+    """Beyond-paper framework feature: LOPC on a 2D weight matrix — the
+    full order-preserving guarantee applies to any 2D grid."""
+    w = (np.cumsum(rng.standard_normal((96, 128)), axis=1) * 1e-2).astype(np.float32)
+    blob, stats = compress(w, 1e-4, "abs", return_stats=True)
+    y = decompress(blob)
+    assert np.abs(w - y).max() <= 1e-4
+    assert local_order_violations(w, y) == 0
+    assert stats.ratio > 1.5
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=10)
+def test_ff32_pipeline_property(seed):
+    """FF32 (TPU) path: bound + order on random small fields."""
+    from repro.core.quantize import effective_eps
+    from repro.core.subbin import solve_subbins
+    from repro.kernels import ops
+
+    rng = np.random.default_rng(seed)
+    x = rng.uniform(-1, 1, (6, 7, 5)).astype(np.float32)
+    eb = float(rng.uniform(0.01, 0.5))
+    eps = np.float32(effective_eps(eb))
+    if not ops.ff32_domain_ok(x, eps):
+        return
+    bins = ops.quantize_ff32(jnp.asarray(x), eps)
+    sub, _ = solve_subbins(bins, jnp.asarray(x))
+    y = np.asarray(ops.dequantize_ff32(bins, sub, eps))
+    assert np.abs(x.astype(np.float64) - y.astype(np.float64)).max() <= eb
+    assert local_order_violations(x, y) == 0
+    assert critical_point_errors(x, y) == (0, 0, 0)
+
+
+def test_subdenormal_bound_rejected():
+    """XLA flushes denormals: bounds below the normal threshold must be
+    rejected rather than silently violated."""
+    x = np.linspace(0, 5e-324 * 1e4, 100)  # subnormal-range field
+    with pytest.raises(ValueError, match="denormal"):
+        compress(x, 1e-3, "noa")
+
+
+def test_paper_config_constants():
+    from repro.configs.lopc import CONFIG
+
+    assert CONFIG.headline_ebs == (1e-2, 1e-4)
+    assert len(CONFIG.sweep_ebs) == 7
+    assert CONFIG.chunk_words[4] * 4 == 16 * 1024
+    assert CONFIG.chunk_words[8] * 8 == 16 * 1024
+
+
+def test_int8_kv_cache_drift_bounded(rng):
+    """cfg.kv_quant: greedy decode must match exact KV decode."""
+    from repro.models import get_arch
+    from repro.models.config import reduced_for_smoke
+    from repro.models.inputs import dummy_batch
+    from repro.models.model import decode_step, init_params, prefill
+
+    spec = get_arch("llava-next-mistral-7b")
+    cfg = reduced_for_smoke(spec.config)
+    cfg_q = cfg.scaled(kv_quant=True)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    batch = dummy_batch(cfg, 2, 24)
+    l1, c1 = prefill(params, batch, cfg, 30)
+    l2, c2 = prefill(params, batch, cfg_q, 30)
+    tok = jnp.argmax(l1, -1).astype(jnp.int32)
+    for _ in range(4):
+        l1, c1 = decode_step(params, tok, c1, cfg)
+        l2, c2 = decode_step(params, tok, c2, cfg_q)
+        assert float(jnp.max(jnp.abs(l1 - l2))) < 0.2
+        assert bool(jnp.array_equal(jnp.argmax(l1, -1), jnp.argmax(l2, -1)))
+        tok = jnp.argmax(l1, -1).astype(jnp.int32)

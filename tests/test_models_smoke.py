@@ -1,0 +1,140 @@
+"""Per-arch smoke tests (brief deliverable f): reduced same-family
+configs, one forward/train step on CPU, asserting shapes, dtypes and
+finiteness.  The full configs are exercised only via the dry-run."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import ARCHITECTURES, get_arch
+from repro.models.config import reduced_for_smoke
+from repro.models.inputs import dummy_batch
+from repro.models.model import decode_step, init_params, prefill, train_loss
+
+BATCH, SEQ = 2, 32
+
+
+def _setup(arch):
+    spec = get_arch(arch)
+    cfg = reduced_for_smoke(spec.config)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    batch = dummy_batch(cfg, BATCH, SEQ)
+    return spec, cfg, params, batch
+
+
+@pytest.mark.parametrize("arch", ARCHITECTURES)
+def test_forward_and_loss(arch):
+    spec, cfg, params, batch = _setup(arch)
+    loss, metrics = jax.jit(lambda p, b: train_loss(p, b, cfg))(params, batch)
+    assert loss.dtype == jnp.float32
+    assert np.isfinite(float(loss)), f"{arch}: non-finite loss"
+    assert float(loss) > 0
+
+
+@pytest.mark.parametrize("arch", ARCHITECTURES)
+def test_grad_step(arch):
+    """One SGD step must change the loss and produce finite grads."""
+    spec, cfg, params, batch = _setup(arch)
+
+    @jax.jit
+    def step(p, b):
+        (loss, _), grads = jax.value_and_grad(
+            lambda q: train_loss(q, b, cfg), has_aux=True
+        )(p)
+        p2 = jax.tree.map(lambda w, g: w - 0.1 * g.astype(w.dtype), p, grads)
+        return loss, p2, grads
+
+    loss1, params2, grads = step(params, batch)
+    gnorms = [float(jnp.linalg.norm(g.astype(jnp.float32)))
+              for g in jax.tree.leaves(grads)]
+    assert all(np.isfinite(g) for g in gnorms), f"{arch}: non-finite grads"
+    assert any(g > 0 for g in gnorms), f"{arch}: all-zero grads"
+    loss2, _, _ = step(params2, batch)
+    assert float(loss2) < float(loss1), f"{arch}: loss did not decrease"
+
+
+@pytest.mark.parametrize("arch", [a for a in ARCHITECTURES
+                                  if "decode_32k" not in get_arch(a).skip_shapes])
+def test_prefill_then_decode(arch):
+    """Serving path: prefill a prompt, decode 3 tokens, check shapes."""
+    spec = get_arch(arch)
+    cfg = reduced_for_smoke(spec.config_for("decode_32k"))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    batch = dummy_batch(cfg, BATCH, SEQ)
+    max_len = SEQ + 8
+
+    logits, caches = jax.jit(
+        lambda p, b: prefill(p, b, cfg, max_len)
+    )(params, batch)
+    assert logits.shape == (BATCH, cfg.vocab)
+    assert np.isfinite(np.asarray(logits)).all()
+
+    dec = jax.jit(lambda p, t, c: decode_step(p, t, c, cfg))
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    for _ in range(3):
+        logits, caches = dec(params, tok, caches)
+        assert logits.shape == (BATCH, cfg.vocab)
+        assert np.isfinite(np.asarray(logits)).all()
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+
+
+def test_decode_matches_forward_rwkv():
+    """Recurrent decode must agree with the chunked parallel form."""
+    _decode_vs_forward("rwkv6-7b", rtol=2e-2)
+
+
+def test_decode_matches_forward_zamba2():
+    _decode_vs_forward("zamba2-1.2b", rtol=2e-2)
+
+
+def test_decode_matches_forward_dense():
+    _decode_vs_forward("qwen2.5-3b", rtol=2e-2)
+
+
+def _decode_vs_forward(arch, rtol):
+    """Teacher-forced decode logits == one-shot forward logits."""
+    from repro.models.model import embed_inputs, forward_hidden, lm_head_weight
+    from repro.models.common import softcap
+
+    spec = get_arch(arch)
+    cfg = reduced_for_smoke(spec.config)
+    if cfg.input_kind != "tokens":
+        return
+    params = init_params(cfg, jax.random.PRNGKey(1))
+    rng = np.random.default_rng(3)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (1, 12)).astype(np.int32))
+
+    # one-shot forward logits at every position
+    h = embed_inputs(params, {"tokens": toks}, cfg)
+    h, _, _ = forward_hidden(params, h, cfg)
+    w = lm_head_weight(params, cfg).astype(jnp.float32)
+    full_logits = softcap(jnp.einsum("bsd,dv->bsv", h.astype(jnp.float32), w),
+                          cfg.final_softcap)
+
+    # prefill 6 tokens, then teacher-forced decode the rest
+    logits_p, caches = prefill(params, {"tokens": toks[:, :6]}, cfg, max_len=16)
+    np.testing.assert_allclose(np.asarray(logits_p), np.asarray(full_logits[:, 5]),
+                               rtol=rtol, atol=1e-2)
+    for t in range(6, 12):
+        logits_d, caches = decode_step(params, toks[:, t], caches, cfg)
+        np.testing.assert_allclose(
+            np.asarray(logits_d), np.asarray(full_logits[:, t]),
+            rtol=rtol, atol=1e-2,
+            err_msg=f"{arch}: decode diverges at position {t}",
+        )
+
+
+def test_dtypes_stay_explicit():
+    """x64 is enabled globally for the compressor; model outputs must
+    still be explicit bf16/f32."""
+    spec, cfg, params, batch = _setup("qwen2.5-3b")
+    from repro.models.model import embed_inputs, forward_hidden
+
+    h = embed_inputs(params, batch, cfg)
+    assert h.dtype == jnp.bfloat16
+    h, _, _ = forward_hidden(params, h, cfg)
+    assert h.dtype == jnp.bfloat16
+    for leaf in jax.tree.leaves(params):
+        assert leaf.dtype in (jnp.float32, jnp.bfloat16), leaf.dtype

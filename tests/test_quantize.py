@@ -1,0 +1,97 @@
+"""Quantizer guarantees (paper §IV-A): strict error bound, monotonicity,
+containment — property-tested with hypothesis on adversarial floats."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import assume, given, strategies as st
+
+from repro.core.floatbits import float_to_ordered, nextafter_k, ordered_to_float
+from repro.core.quantize import (
+    abs_bound_from_mode,
+    decode_base,
+    dequantize,
+    effective_eps,
+    quantize,
+)
+
+
+@given(
+    st.lists(
+        st.floats(min_value=-1e6, max_value=1e6, allow_nan=False, width=32),
+        min_size=1,
+        max_size=64,
+    ),
+    st.floats(min_value=1e-6, max_value=10.0),
+)
+def test_f32_bound_and_containment(vals, eb):
+    x = np.array(vals, np.float32)
+    # public-API contract: f32 uses i32 bins; compress() rejects overflow
+    assume(np.abs(x).max() / effective_eps(eb) < np.iinfo(np.int32).max * 0.5)
+    b = quantize(jnp.asarray(x), eb)
+    eps = effective_eps(eb)
+    base = decode_base(b, eps, jnp.float32)
+    top = decode_base(b + 1, eps, jnp.float32)
+    assert bool(jnp.all(jnp.asarray(x) >= base)), "containment (bottom)"
+    assert bool(jnp.all(jnp.asarray(x) < top)), "containment (top)"
+    # decode at subbin 0 is within the user bound
+    y = dequantize(b, jnp.zeros_like(b), eb, jnp.float32)
+    assert np.all(np.abs(x.astype(np.float64) - np.asarray(y, np.float64)) <= eb)
+
+
+@given(
+    st.lists(
+        st.floats(min_value=-1e12, max_value=1e12, allow_nan=False),
+        min_size=1,
+        max_size=64,
+    ),
+    st.floats(min_value=1e-9, max_value=100.0),
+)
+def test_f64_bound_and_containment(vals, eb):
+    x = np.array(vals, np.float64)
+    assume(np.abs(x).max() / effective_eps(eb) < np.iinfo(np.int64).max * 0.5)
+    b = quantize(jnp.asarray(x), eb)
+    y = dequantize(b, jnp.zeros_like(b), eb, jnp.float64)
+    assert np.all(np.abs(x - np.asarray(y)) <= eb)
+
+
+def test_monotone(rng):
+    x = np.sort(rng.standard_normal(1000)).astype(np.float64)
+    b = np.asarray(quantize(jnp.asarray(x), 1e-3))
+    assert np.all(np.diff(b) >= 0), "quantization must be monotone increasing"
+
+
+@pytest.mark.parametrize("mode,expected", [("abs", 0.5), ("noa", 0.5 * 3.0)])
+def test_bound_modes(mode, expected):
+    x = np.array([0.0, 1.0, 3.0])
+    assert abs_bound_from_mode(x, 0.5, mode) == pytest.approx(expected)
+
+
+def test_noa_constant_field():
+    x = np.zeros(10)
+    assert abs_bound_from_mode(x, 0.5, "noa") == pytest.approx(0.5)
+
+
+@given(
+    st.floats(min_value=-1e30, max_value=1e30, allow_nan=False),
+    st.integers(min_value=0, max_value=100),
+)
+def test_ordered_int_roundtrip_and_nextafter(v, k):
+    for dtype in (np.float32, np.float64):
+        x = jnp.asarray(np.array([v], dtype))
+        m = float_to_ordered(x)
+        back = ordered_to_float(m, dtype)
+        assert np.asarray(back == x).all() or (float(x[0]) == 0.0)
+        stepped = np.asarray(nextafter_k(x, jnp.asarray([k])))[0]
+        expect = float(x[0])
+        for _ in range(k):
+            expect = np.nextafter(np.array(expect, dtype), np.array(np.inf, dtype))
+        assert stepped == expect
+
+
+def test_ordered_int_is_monotone(rng):
+    for dtype in (np.float32, np.float64):
+        x = np.sort(rng.standard_normal(500).astype(dtype))
+        m = np.asarray(float_to_ordered(jnp.asarray(x)))
+        assert np.all(np.diff(m) >= 0)

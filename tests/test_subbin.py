@@ -1,0 +1,109 @@
+"""Local-order solver invariants (paper §IV-B/E): fixed point correctness,
+schedule independence, termination bounds, minimality."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import topology
+from repro.core.quantize import dequantize, quantize
+from repro.core.subbin import encode_field, solve_subbins, verify_no_violation
+from repro.tda.critpoints import local_order_violations
+
+
+def _roundtrip_order_ok(x, eb=0.5):
+    xj = jnp.asarray(x)
+    bins, sub, _ = encode_field(xj, eb)
+    assert bool(verify_no_violation(bins, xj, sub))
+    y = np.asarray(dequantize(bins, sub, eb, xj.dtype))
+    assert np.all(np.abs(x - y) <= eb)
+    assert local_order_violations(x, y) == 0
+    return y
+
+
+@given(st.lists(st.floats(-10, 10, allow_nan=False), min_size=2, max_size=48))
+def test_1d_order_preserved(vals):
+    _roundtrip_order_ok(np.array(vals, np.float64))
+
+
+@given(
+    st.integers(2, 7), st.integers(2, 7),
+    st.floats(0.05, 4.0),
+    st.integers(0, 2**31 - 1),
+)
+def test_2d_order_preserved(h, w, eb, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.uniform(-1, 1, (h, w))
+    _roundtrip_order_ok(x, eb)
+
+
+@given(st.integers(2, 5), st.integers(2, 5), st.integers(2, 5), st.integers(0, 2**31 - 1))
+def test_3d_order_preserved(a, b, c, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.uniform(-1, 1, (a, b, c))
+    _roundtrip_order_ok(x, 0.7)
+
+
+def test_schedule_independence(field3d):
+    """jacobi and frontier must produce bit-identical subbins (the
+    least-fixed-point argument behind the paper's CPU/GPU parity)."""
+    xj = jnp.asarray(field3d)
+    bins = quantize(xj, 0.3)
+    s1, _ = solve_subbins(bins, xj, method="jacobi")
+    s2, _ = solve_subbins(bins, xj, method="frontier")
+    assert np.array_equal(np.asarray(s1), np.asarray(s2))
+
+
+def test_increasing_ramp_needs_no_subbins():
+    """Strictly increasing values *with increasing index* inside one bin:
+    SoS index order already realizes the value order -> all-zero subbins."""
+    n = 64
+    x = np.cumsum(np.full(n, 1e-9))
+    xj = jnp.asarray(x)
+    bins, sub, iters = encode_field(xj, 1.0)
+    assert int(np.ptp(np.asarray(bins))) == 0, "all in one bin"
+    assert np.asarray(sub).max() == 0
+    assert int(iters) <= 2
+
+
+def test_worst_case_chain_terminates():
+    """Adversarial case from §IV-E: *decreasing* values with increasing
+    index inside one bin. Every pair needs the +1 tie-breaker, forcing
+    subbins n-1..0 and the longest possible constraint chain. Jacobi
+    must converge in <= n sweeps."""
+    n = 64
+    x = -np.cumsum(np.full(n, 1e-9))
+    bins, sub, iters = encode_field(jnp.asarray(x), 1.0)
+    assert bool(verify_no_violation(bins, jnp.asarray(x), sub))
+    s = np.asarray(sub)
+    assert np.array_equal(s, np.arange(n)[::-1]), s
+    assert int(iters) <= n + 2
+
+
+def test_minimality(field2d):
+    """The fixed point is the *least* one: decrementing any positive
+    subbin must violate a constraint (checked on a sample)."""
+    xj = jnp.asarray(field2d)
+    bins, sub, _ = encode_field(xj, 0.5)
+    s = np.asarray(sub)
+    pos = np.argwhere(s > 0)
+    rng = np.random.default_rng(0)
+    for idx in pos[rng.permutation(len(pos))[:10]]:
+        s2 = s.copy()
+        s2[tuple(idx)] -= 1
+        assert not bool(verify_no_violation(bins, xj, jnp.asarray(s2)))
+
+
+def test_equal_plateau_shares_subbin():
+    x = np.zeros(32)
+    _, sub, _ = encode_field(jnp.asarray(x), 1.0)
+    assert np.asarray(sub).max() == 0
+
+
+def test_tiny_eb_no_corrections(field3d):
+    """Tight bound: most neighbors land in distinct bins; few sweeps."""
+    _, sub, iters = encode_field(jnp.asarray(field3d), 1e-9)
+    assert int(iters) <= 3
+    assert np.asarray(sub).max() == 0

@@ -1,0 +1,135 @@
+"""End-to-end behaviour: the paper's headline claims, as tests.
+
+1. Full local-order + critical-point preservation (Table III: 0/0/0).
+2. Strict error bound (ABS and NOA).
+3. Deterministic, schedule-independent bytes (CPU/GPU parity surrogate).
+4. Ratio ordering vs baselines (paper §VI-B qualitative structure).
+5. Bin/subbin information density shift with the bound (Fig. 4).
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.codecs import baselines as B
+from repro.core import compress, decompress
+from repro.tda import critical_point_errors, local_order_violations, psnr, ssim
+
+from conftest import make_field
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.float64])
+@pytest.mark.parametrize("eb", [1e-2, 1e-4])
+def test_lopc_preserves_everything(rng, dtype, eb):
+    x = make_field(rng, (18, 15, 12), dtype)
+    blob = compress(x, eb, "noa")
+    y = decompress(blob)
+    assert y.dtype == x.dtype and y.shape == x.shape
+    bound = eb * (float(x.max()) - float(x.min()))
+    assert np.abs(x.astype(np.float64) - y.astype(np.float64)).max() <= bound
+    assert critical_point_errors(x, y) == (0, 0, 0)
+    assert local_order_violations(x, y) == 0
+
+
+def test_abs_mode_bound(rng):
+    x = make_field(rng, (30, 25), np.float64)
+    blob = compress(x, 0.05, "abs")
+    y = decompress(blob)
+    assert np.abs(x - y).max() <= 0.05
+
+
+def test_bytes_deterministic(rng):
+    """Same input -> identical bytes, across runs and solver schedules."""
+    x = make_field(rng, (16, 14, 11), np.float64)
+    b1 = compress(x, 1e-2, "noa", solver="jacobi")
+    b2 = compress(x, 1e-2, "noa", solver="jacobi")
+    b3 = compress(x, 1e-2, "noa", solver="frontier")
+    assert b1 == b2 == b3
+
+
+def test_recompression_idempotent(rng):
+    """decompress(compress(x)) is a fixed point of the codec under ABS
+    bounds. (Under NOA the reconstruction changes the field's range and
+    hence eps, so exact idempotence is only an ABS-mode property:
+    same eps => same bins by containment => same SoS order => same
+    flags => same subbins.)"""
+    x = make_field(rng, (14, 13, 10), np.float64)
+    y = decompress(compress(x, 0.02, "abs"))
+    z = decompress(compress(y, 0.02, "abs"))
+    assert np.array_equal(y, z)
+
+
+def test_ratio_ordering_vs_baselines(rng):
+    """Paper §VI-B: lossless < LOPC < non-topo lossy (on smooth data)."""
+    x = make_field(rng, (40, 40, 30), np.float64)
+    _, stats = compress(x, 1e-2, "noa", return_stats=True)
+    r_lossless = B.lossless_fp(x).ratio
+    r_zstd = B.zstd_raw(x).ratio
+    r_pfpl = B.pfpl_lite(x, 1e-2).ratio
+    assert stats.ratio > max(r_lossless, r_zstd), "LOPC must beat lossless"
+    assert r_pfpl > stats.ratio, "non-topo lossy must beat LOPC"
+
+
+def test_bin_subbin_density_shift(rng):
+    """Fig. 4: loose bound -> subbins dominate; tight bound -> bins."""
+    x = make_field(rng, (32, 32, 24), np.float64)
+    _, loose = compress(x, 1e-1, "noa", return_stats=True)
+    _, tight = compress(x, 1e-5, "noa", return_stats=True)
+    frac_loose = loose.subbin_bytes / (loose.subbin_bytes + loose.bin_bytes)
+    frac_tight = tight.subbin_bytes / (tight.subbin_bytes + tight.bin_bytes)
+    assert frac_loose > frac_tight
+    assert frac_tight < 0.2
+
+
+def test_baselines_violate_topology(rng):
+    """The separation that motivates the paper (Table III)."""
+    x = make_field(rng, (24, 20, 16), np.float64)
+    for res in (B.pfpl_lite(x, 1e-2), B.sz_lorenzo(x, 1e-2)):
+        fp, fn, ft = critical_point_errors(x, res.decoded)
+        assert fp + fn + ft > 0
+
+
+def test_baseline_bounds(rng):
+    x = make_field(rng, (24, 20, 16), np.float64)
+    bound = 1e-2 * (float(x.max()) - float(x.min()))
+    for res in (B.pfpl_lite(x, 1e-2), B.sz_lorenzo(x, 1e-2), B.topoqz_lite(x, 1e-2)):
+        assert np.abs(x - res.decoded).max() <= bound
+
+
+def test_quality_metrics(rng):
+    x = make_field(rng, (24, 20, 16), np.float64)
+    y = decompress(compress(x, 1e-4, "noa"))
+    assert psnr(x, y) > 60
+    assert ssim(x, y) > 0.99
+    assert psnr(x, x) == float("inf")
+    assert ssim(x, x) == pytest.approx(1.0)
+
+
+def test_nonfinite_sidecar(rng):
+    """NaN/Inf cells (ocean masks etc.) restore BIT-EXACTLY; the finite
+    region keeps the full guarantee set."""
+    x = make_field(rng, (20, 18, 12), np.float64)
+    x[rng.random(x.shape) < 0.1] = np.nan
+    x[0, 0, :3] = [np.inf, -np.inf, np.nan]
+    blob = compress(x, 1e-2, "noa")
+    y = decompress(blob)
+    mask = ~np.isfinite(x)
+    assert np.array_equal(np.isnan(x), np.isnan(y))
+    assert np.array_equal(x[mask & ~np.isnan(x)], y[mask & ~np.isnan(x)])
+    # finite region: the error bound holds cell-wise. (Critical points
+    # ADJACENT to NaN cells are undefined in the source data — the
+    # reason the paper requires finite input; the sidecar documents that
+    # the order guarantee is w.r.t. the finite-filled field.)
+    bound = 1e-2 * (x[~mask].max() - x[~mask].min())
+    assert np.abs(x[~mask] - y[~mask]).max() <= bound
+
+
+def test_input_validation():
+    with pytest.raises(ValueError, match="float32/float64"):
+        compress(np.array([1, 2]), 0.1)
+    with pytest.raises(ValueError, match="positive"):
+        compress(np.array([1.0, 2.0]), -0.1)
+    with pytest.raises(ValueError, match="1D/2D/3D"):
+        compress(np.zeros((2, 2, 2, 2)), 0.1)
+    with pytest.raises(ValueError, match="overflow"):
+        compress(np.array([1e30, -1e30], np.float32), 1e-9, "abs")

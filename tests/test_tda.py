@@ -1,0 +1,104 @@
+"""Critical-point classifier vs a brute-force python oracle."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core.topology import link_adjacency, offsets, tie_breaker
+from repro.tda.critpoints import (
+    CLASS_MAX,
+    CLASS_MIN,
+    CLASS_REGULAR,
+    CLASS_SADDLE,
+    classify_critical_points,
+    critical_signature,
+)
+
+
+def _brute_signature(x: np.ndarray, idx: tuple[int, ...]):
+    """Independent python implementation: CCs of lower/upper link."""
+    offs = offsets(x.ndim)
+    adj = link_adjacency(x.ndim)
+    v, lin = x[idx], np.ravel_multi_index(idx, x.shape)
+
+    members_lower, members_upper = [], []
+    for k, off in enumerate(offs):
+        nidx = tuple(np.array(idx) + off)
+        if any(c < 0 or c >= s for c, s in zip(nidx, x.shape)):
+            continue
+        nv, nlin = x[nidx], np.ravel_multi_index(nidx, x.shape)
+        if (nv, nlin) < (v, lin):
+            members_lower.append(k)
+        else:
+            members_upper.append(k)
+
+    def n_cc(members):
+        members = set(members)
+        seen, n = set(), 0
+        for m in members:
+            if m in seen:
+                continue
+            n += 1
+            stack = [m]
+            while stack:
+                u = stack.pop()
+                if u in seen:
+                    continue
+                seen.add(u)
+                stack.extend(w for w in members if adj[u, w] and w not in seen)
+        return n
+
+    return n_cc(members_lower), n_cc(members_upper)
+
+
+@pytest.mark.parametrize("shape", [(9, 8), (6, 5, 7)])
+def test_signature_matches_bruteforce(rng, shape):
+    x = rng.standard_normal(shape)
+    lo, up = critical_signature(x)
+    lo, up = np.asarray(lo), np.asarray(up)
+    it = np.ndindex(*shape)
+    for idx in it:
+        blo, bup = _brute_signature(x, idx)
+        assert (lo[idx], up[idx]) == (blo, bup), f"mismatch at {idx}"
+
+
+def test_classify_quadratic_extrema():
+    g = np.linspace(-1, 1, 21)
+    X, Y = np.meshgrid(g, g, indexing="ij")
+    bowl = X**2 + Y**2
+    cls = np.asarray(classify_critical_points(bowl))
+    assert cls[10, 10] == CLASS_MIN
+    cls2 = np.asarray(classify_critical_points(-bowl))
+    assert cls2[10, 10] == CLASS_MAX
+    saddle = X**2 - Y**2
+    cls3 = np.asarray(classify_critical_points(saddle))
+    assert cls3[10, 10] == CLASS_SADDLE
+
+
+def test_monotone_field_has_no_interior_critical_points():
+    g = np.arange(20.0)
+    X, Y, Z = np.meshgrid(g, g, g, indexing="ij")
+    x = X + 2 * Y + 4 * Z
+    cls = np.asarray(classify_critical_points(x))
+    assert (cls[1:-1, 1:-1, 1:-1] == CLASS_REGULAR).all()
+
+
+def test_constant_field_sos_resolves():
+    """All-equal values: SoS orders by index => a single min at index 0,
+    single max at the last index, no saddles in between for 1D."""
+    x = np.zeros(16)
+    cls = np.asarray(classify_critical_points(x))
+    assert cls[0] == CLASS_MIN and cls[-1] == CLASS_MAX
+    assert (cls[1:-1] == CLASS_REGULAR).all()
+
+
+def test_link_adjacency_structure():
+    # 2D: hexagonal link, every vertex has exactly 2 link neighbors
+    adj2 = link_adjacency(2)
+    assert (adj2.sum(1) == 2).all()
+    # 3D: 14-vertex link of the Freudenthal subdivision (triangulated
+    # 2-sphere: 14 vertices, 36 edges, 24 triangles, V-E+F=2)
+    adj3 = link_adjacency(3)
+    assert adj3.sum() // 2 == 36
+    # offsets: positive half first, ties constant per offset sign
+    assert (tie_breaker(3)[:7] == 1).all() and (tie_breaker(3)[7:] == 0).all()
