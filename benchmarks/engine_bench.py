@@ -1,0 +1,92 @@
+"""Engine vs legacy throughput: the perf trajectory tracker.
+
+Compares the legacy per-field path (v1 container, one jit trace per
+field shape) against the tiled engine (v2, shape-stable batched
+programs) on the paper-input stand-ins, and writes ``BENCH_engine.json``
+so successive PRs can track compress/decompress MB/s.
+
+  PYTHONPATH=src python -m benchmarks.run --only engine
+"""
+from __future__ import annotations
+
+import json
+import platform
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro import engine
+from repro.core import compress, decompress
+
+from .common import emit, timed
+
+OUT_PATH = Path(__file__).resolve().parent / "results" / "BENCH_engine.json"
+
+# One shared production plan: every field below reuses the same traces.
+PLAN = engine.CompressionPlan(tile_shape=(16, 16, 64), batch_tiles=8)
+EB = 1e-2
+
+
+def _bench_legacy(x: np.ndarray):
+    blob, t_c = timed(compress, x, EB, "noa", container_version=1)
+    _, t_d = timed(decompress, blob)
+    return blob, t_c, t_d
+
+
+def _bench_engine(x: np.ndarray):
+    blob, t_c = timed(engine.compress, x, EB, plan=PLAN)
+    _, t_d = timed(engine.decompress, blob, plan=PLAN)
+    return blob, t_c, t_d
+
+
+def run(inputs: dict[str, np.ndarray]) -> dict:
+    rows = []
+    report = {
+        "eb": EB,
+        "mode": "noa",
+        "tile_shape": list(PLAN.tile_shape),
+        "batch_tiles": PLAN.batch_tiles,
+        "backend": jax.default_backend(),
+        "platform": platform.platform(),
+        "fields": {},
+    }
+    names = sorted(inputs)
+    for name in names:
+        x = inputs[name]
+        mb = x.nbytes / 1e6
+        lb, lc, ld = _bench_legacy(x)
+        eb_blob, ec, ed = _bench_engine(x)
+        entry = {
+            "shape": list(x.shape),
+            "dtype": str(x.dtype),
+            "mb": mb,
+            "legacy": {"compress_mbps": mb / lc, "decompress_mbps": mb / ld,
+                       "ratio": x.nbytes / len(lb)},
+            "engine": {"compress_mbps": mb / ec, "decompress_mbps": mb / ed,
+                       "ratio": x.nbytes / len(eb_blob)},
+        }
+        report["fields"][name] = entry
+        rows.append((f"{name}_legacy_compress", lc, f"{mb / lc:.1f}MB/s"))
+        rows.append((f"{name}_engine_compress", ec, f"{mb / ec:.1f}MB/s"))
+        rows.append((f"{name}_legacy_decompress", ld, f"{mb / ld:.1f}MB/s"))
+        rows.append((f"{name}_engine_decompress", ed, f"{mb / ed:.1f}MB/s"))
+
+    # batched serving shape: all fields as ONE compress_many call
+    fields = [inputs[n] for n in names]
+    total_mb = sum(x.nbytes for x in fields) / 1e6
+    blobs, t_many = timed(engine.compress_many, fields, EB, plan=PLAN)
+    _, t_dmany = timed(engine.decompress_many, blobs, plan=PLAN)
+    report["batched"] = {
+        "n_fields": len(fields),
+        "compress_mbps": total_mb / t_many,
+        "decompress_mbps": total_mb / t_dmany,
+        "trace_count": engine.device.trace_count(),
+    }
+    rows.append(("all_fields_compress_many", t_many, f"{total_mb / t_many:.1f}MB/s"))
+    rows.append(("all_fields_decompress_many", t_dmany, f"{total_mb / t_dmany:.1f}MB/s"))
+
+    OUT_PATH.parent.mkdir(parents=True, exist_ok=True)
+    OUT_PATH.write_text(json.dumps(report, indent=1))
+    emit(rows, f"engine vs legacy throughput (eb={EB} noa) -> {OUT_PATH}")
+    return report

@@ -13,10 +13,11 @@ import time
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="table3|table45|table67|fig3|fig4|table89|roofline")
+                    help="table3|table45|table67|fig3|fig4|table89|engine|roofline")
     args = ap.parse_args()
 
     from . import (  # noqa: WPS433
+        engine_bench,
         fig3_eb_sweep,
         fig4_binsplit,
         roofline,
@@ -34,6 +35,7 @@ def main() -> None:
         "fig3": fig3_eb_sweep.run,
         "fig4": fig4_binsplit.run,
         "table89": table89_quality.run,
+        "engine": engine_bench.run,
     }
     t0 = time.time()
     inputs = load_inputs()

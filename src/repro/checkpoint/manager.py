@@ -8,8 +8,12 @@ Layout:
 
 Codecs per leaf (chosen automatically, override via `codec`):
     lopc-lossless : ordered-int delta+BIT+RZE pipeline (f32/f64, exact)
-    lopc-lossy    : guaranteed |err|<=eb quantization + PFPL pipeline
-                    (optimizer moments / weights when eb is supplied)
+    lopc-v2       : guaranteed |err|<=eb engine compression (tiled v2
+                    container; all lossy leaves of one save are batched
+                    through ONE engine.compress_many call, sharing tile
+                    batches and jit traces across leaf shapes)
+    lopc-lossy    : legacy whole-field lossy pipeline — still decoded
+                    for checkpoints written by earlier releases
     raw           : verbatim bytes (ints, bf16, small leaves)
 
 Fault tolerance properties:
@@ -35,8 +39,8 @@ from pathlib import Path
 import jax
 import numpy as np
 
+from .. import engine
 from ..codecs import pipeline as codec_pipeline
-from ..core import bitstream
 from ..core.floatbits import float_to_ordered, ordered_to_float
 from ..core.quantize import bin_dtype_for, dequantize, quantize
 
@@ -45,12 +49,34 @@ import jax.numpy as jnp
 
 # ------------------------------------------------------------- leaf codecs
 
+def _engine_view(x: np.ndarray) -> np.ndarray:
+    """Leaves are arbitrary-rank; the engine wants 1/2/3-D grids.  Rank
+    >3 (or 0) leaves flatten to 1-D — order preservation is off on the
+    checkpoint path, so only the point-wise bound matters and any
+    reshape is sound.  The manifest shape restores the original rank."""
+    return x if 1 <= x.ndim <= 3 else x.reshape(-1)
+
+
+# Engine parameters of the lopc-v2 leaf codec — single source of truth
+# for the per-leaf encoder and save_tree's batched path.
+_ENGINE_LOSSY_KW = dict(mode="abs", preserve_order=False)
+
+# Cap on raw bytes per batched compress_many call: bounds the engine's
+# host working set (~4-6x the raw bytes across tile/bin/flag buffers)
+# while keeping the trace-sharing benefit for the common case.
+_ENGINE_BATCH_BYTES = 256 << 20
+
+
 def _encode_leaf(x: np.ndarray, codec: str, eb: float | None):
     if codec == "raw":
         return x.tobytes(), {}
     if codec == "lopc-lossless":
         ints = float_to_ordered(jnp.asarray(x))
         return codec_pipeline.encode_bins(ints), {}
+    if codec == "lopc-v2":
+        assert eb is not None and x.dtype in (np.float32, np.float64)
+        blob = engine.compress(_engine_view(x), float(eb), **_ENGINE_LOSSY_KW)
+        return blob, {"eb": float(eb)}
     if codec == "lopc-lossy":
         assert eb is not None and x.dtype in (np.float32, np.float64)
         eps = float(eb)
@@ -67,7 +93,9 @@ def _decode_leaf(payload: bytes, codec: str, shape, dtype, extra):
     if codec == "lopc-lossless":
         ints = codec_pipeline.decode_bins(payload, n, shape, bin_dtype_for(dtype))
         return np.asarray(ordered_to_float(jnp.asarray(ints), dtype))
-    if codec == "lopc-lossy":
+    if codec == "lopc-v2":
+        return engine.decompress(payload).reshape(shape)
+    if codec == "lopc-lossy":  # checkpoints from earlier releases
         bins = codec_pipeline.decode_bins(payload, n, shape, bin_dtype_for(dtype))
         sub = np.zeros(shape, bins.dtype)
         return np.asarray(dequantize(jnp.asarray(bins), jnp.asarray(sub),
@@ -77,8 +105,21 @@ def _decode_leaf(payload: bytes, codec: str, shape, dtype, extra):
 
 def _auto_codec(x: np.ndarray, eb: float | None) -> str:
     if x.dtype in (np.float32, np.float64) and x.size >= 1024:
-        return "lopc-lossy" if eb is not None else "lopc-lossless"
+        return "lopc-v2" if eb is not None else "lopc-lossless"
     return "raw"
+
+
+def _chunk_by_bytes(ids, hosts, cap):
+    """Split leaf ids into runs whose raw bytes stay under ``cap``."""
+    chunk, size = [], 0
+    for i in ids:
+        if chunk and size + hosts[i].nbytes > cap:
+            yield chunk
+            chunk, size = [], 0
+        chunk.append(i)
+        size += hosts[i].nbytes
+    if chunk:
+        yield chunk
 
 
 # --------------------------------------------------------------- save/load
@@ -97,12 +138,32 @@ def save_tree(tree, directory: str | Path, step: int, eb: float | None = None,
     paths = jax.tree_util.tree_flatten_with_path(tree)[0]
     manifest = {"step": step, "treedef": str(treedef), "leaves": [],
                 "raw_bytes": 0, "stored_bytes": 0}
-    for i, ((path, leaf), _) in enumerate(zip(paths, leaves)):
-        x = np.asarray(jax.device_get(leaf))
+    hosts = [np.asarray(jax.device_get(leaf)) for leaf in leaves]
+    codecs = []
+    for x in hosts:
         c = codec or _auto_codec(x, eb)
-        if c == "lopc-lossy" and x.dtype not in (np.float32, np.float64):
+        if c in ("lopc-v2", "lopc-lossy") and x.dtype not in (np.float32, np.float64):
             c = "raw"
-        payload, extra = _encode_leaf(x, c, eb)
+        codecs.append(c)
+    # All engine-bound leaves of this save compress in ONE batched call:
+    # their tiles share fixed-shape device batches regardless of leaf
+    # shapes, so a whole pytree costs the same traces as one leaf.
+    engine_ids = [i for i, c in enumerate(codecs) if c == "lopc-v2"]
+    encoded = {}
+    if engine_ids:
+        if eb is None:
+            raise ValueError('codec "lopc-v2" requires an error bound (eb)')
+        for chunk in _chunk_by_bytes(engine_ids, hosts, _ENGINE_BATCH_BYTES):
+            blobs = engine.compress_many(
+                [_engine_view(hosts[i]) for i in chunk], float(eb),
+                **_ENGINE_LOSSY_KW,
+            )
+            encoded.update(
+                (i, (b, {"eb": float(eb)})) for i, b in zip(chunk, blobs)
+            )
+    for i, ((path, _), x) in enumerate(zip(paths, hosts)):
+        c = codecs[i]
+        payload, extra = encoded[i] if i in encoded else _encode_leaf(x, c, eb)
         fname = f"leaf_{i}.bin"
         (tmp / fname).write_bytes(payload)
         manifest["leaves"].append({

@@ -16,6 +16,24 @@ must be identical across solver schedules — the paper's bit-parity
 guarantee. Sweep counts are diagnostics, reported via CompressStats.)
   body: sections, each [u8 tag][u64 len][payload]
 
+Container v2 (the tiled engine format) keeps the same header prefix but
+replaces the single whole-field body with an *indexed per-tile section
+table*, enabling embarrassingly-parallel and partial (region-of-
+interest) decode:
+
+  [4s magic][u8 version=2][u8 flags][u8 dtype][u8 ndim][u64 shape*ndim]
+  [u8 eb_mode][f64 eb][f64 eps_abs]
+  [u64 tile_shape*3][u64 grid*3][u32 n_tiles][u8 n_extra]
+  extras dir : n_extra x [u8 tag][u64 off][u64 len]
+  tile index : n_tiles x [u64 bins_off][u64 bins_len]
+                         [u64 sub_off][u64 sub_len][u32 crc32]
+  [u32 crc32 of every byte above]
+  data area  : concatenated payloads (offsets relative to its start)
+
+Integrity is split so partial decode stays cheap: one crc over the
+header+index, one crc *per tile* over its payload bytes.  A reader can
+verify and decode any tile subset without touching the rest.
+
 RZE section payload:
 
   [u32 n_chunks][u32 chunk_len][u8 word_bytes][u8 final_rze]
@@ -41,11 +59,24 @@ from ..codecs.rze import (
 
 MAGIC = b"LOPC"
 VERSION = 1
+VERSION_TILED = 2
 
 DTYPE_CODES = {np.dtype(np.float32): 0, np.dtype(np.float64): 1}
 CODES_DTYPE = {v: k for k, v in DTYPE_CODES.items()}
 EB_MODES = {"abs": 0, "noa": 1}
 MODES_EB = {v: k for k, v in EB_MODES.items()}
+
+# Canonical section tags (shared by the v1 body and the v2 extras dir).
+TAG_BINS = 1
+TAG_SUBBINS = 2
+TAG_NONFINITE = 3
+
+# Container flags byte (shared by v1 and v2 writers/readers).
+FLAG_ORDER_PRESERVING = 1
+FLAG_HAS_NONFINITE = 2
+
+# v2 extras must be understood to be decoded safely: reject unknowns.
+V2_KNOWN_TAGS = frozenset({TAG_NONFINITE})
 
 
 class Writer:
@@ -186,6 +217,13 @@ def write_container(header: Header, sections: dict[int, bytes]) -> bytes:
     return w.getvalue()
 
 
+def container_version(blob: bytes) -> int:
+    """Peek the version byte (both formats share the magic prefix)."""
+    if len(blob) < 5 or blob[:4] != MAGIC:
+        raise ValueError("not an LOPC container")
+    return blob[4]
+
+
 def read_container(blob: bytes) -> tuple[Header, dict[int, bytes]]:
     r = Reader(blob)
     if r.raw(4) != MAGIC:
@@ -207,3 +245,156 @@ def read_container(blob: bytes) -> tuple[Header, dict[int, bytes]]:
         sections[tag] = r2.raw(n)
     header = Header(CODES_DTYPE[dtc], shape, eb_mode, eb, eps_abs, flags)
     return header, sections
+
+
+# ---------------------------------------------------------- container v2
+
+@dataclass
+class TileEntry:
+    bins_off: int
+    bins_len: int
+    sub_off: int
+    sub_len: int
+    crc: int
+
+
+_TILE_ENTRY_FMT = "QQQQI"
+
+
+def write_container_v2(
+    header: Header,
+    tile_shape: tuple[int, int, int],
+    grid: tuple[int, int, int],
+    tiles: list[tuple[bytes, bytes]],
+    extra: dict[int, bytes] | None = None,
+) -> bytes:
+    """Assemble a tiled (v2) container.
+
+    ``tiles`` holds one ``(bins_payload, subbins_payload)`` pair per tile
+    in row-major grid order (subbins payload empty when the stream is not
+    order-preserving).  ``extra`` carries whole-field sidecars such as
+    the non-finite section.
+    """
+    extra = extra or {}
+    for tag in extra:
+        if tag not in V2_KNOWN_TAGS:
+            raise ValueError(f"unknown v2 section tag {tag}")
+    data = Writer()
+    entries = []
+    off = 0
+    for bins_b, sub_b in tiles:
+        crc = zlib.crc32(sub_b, zlib.crc32(bins_b)) & 0xFFFFFFFF
+        entries.append(TileEntry(off, len(bins_b), off + len(bins_b),
+                                 len(sub_b), crc))
+        data.raw(bins_b)
+        data.raw(sub_b)
+        off += len(bins_b) + len(sub_b)
+    extra_dir = []
+    for tag, payload in sorted(extra.items()):
+        extra_dir.append((tag, off, len(payload)))
+        data.raw(payload)
+        off += len(payload)
+
+    w = Writer()
+    w.raw(MAGIC)
+    w.pack("BBBB", VERSION_TILED, header.flags,
+           DTYPE_CODES[np.dtype(header.dtype)], len(header.shape))
+    w.pack("Q" * len(header.shape), *header.shape)
+    w.pack("B", EB_MODES[header.eb_mode])
+    w.pack("dd", header.eb, header.eps_abs)
+    w.pack("QQQ", *tile_shape)
+    w.pack("QQQ", *grid)
+    w.pack("IB", len(entries), len(extra_dir))
+    for tag, eoff, elen in extra_dir:
+        w.pack("BQQ", tag, eoff, elen)
+    for e in entries:
+        w.pack(_TILE_ENTRY_FMT, e.bins_off, e.bins_len, e.sub_off,
+               e.sub_len, e.crc)
+    head = w.getvalue()
+    return head + struct.pack("<I", zlib.crc32(head) & 0xFFFFFFFF) + data.getvalue()
+
+
+@dataclass
+class ContainerV2:
+    """Parsed v2 container: header + tile index over a zero-copy blob.
+
+    Tile payloads are sliced (and crc-verified) lazily, so a reader can
+    decode any subset of tiles — the basis of parallel and ROI decode.
+    """
+
+    header: Header
+    tile_shape: tuple[int, int, int]
+    grid: tuple[int, int, int]
+    entries: list[TileEntry]
+    extra: dict[int, tuple[int, int]]
+    data_off: int
+    blob: bytes
+
+    @property
+    def n_tiles(self) -> int:
+        return len(self.entries)
+
+    def _slice(self, off: int, n: int) -> bytes:
+        lo = self.data_off + off
+        b = self.blob[lo : lo + n]
+        if len(b) != n:
+            raise ValueError("truncated stream")
+        return b
+
+    def tile_payloads(self, i: int) -> tuple[bytes, bytes]:
+        e = self.entries[i]
+        bins_b = self._slice(e.bins_off, e.bins_len)
+        sub_b = self._slice(e.sub_off, e.sub_len)
+        if (zlib.crc32(sub_b, zlib.crc32(bins_b)) & 0xFFFFFFFF) != e.crc:
+            raise ValueError(f"corrupt LOPC container (tile {i} crc mismatch)")
+        return bins_b, sub_b
+
+    def extra_section(self, tag: int) -> bytes:
+        off, n = self.extra[tag]
+        return self._slice(off, n)
+
+
+def read_container_v2(blob: bytes) -> ContainerV2:
+    r = Reader(blob)
+    if r.raw(4) != MAGIC:
+        raise ValueError("not an LOPC container")
+    version, flags, dtc, ndim = r.unpack("BBBB")
+    if version != VERSION_TILED:
+        raise ValueError(f"unsupported container version {version}")
+    if dtc not in CODES_DTYPE:
+        raise ValueError(f"corrupt LOPC container (dtype code {dtc})")
+    if ndim < 1 or ndim > 3:
+        raise ValueError(f"corrupt LOPC container (ndim={ndim})")
+    shape = tuple(np.atleast_1d(r.unpack("Q" * ndim)).tolist()) if ndim > 1 else (r.unpack("Q"),)
+    mode_code = r.unpack("B")
+    if mode_code not in MODES_EB:
+        raise ValueError(f"corrupt LOPC container (eb mode {mode_code})")
+    eb_mode = MODES_EB[mode_code]
+    eb, eps_abs = r.unpack("dd")
+    tile_shape = tuple(r.unpack("QQQ"))
+    grid = tuple(r.unpack("QQQ"))
+    if min(tile_shape) < 1 or min(grid) < 1:
+        raise ValueError("corrupt LOPC container (zero tile/grid extent)")
+    n_tiles, n_extra = r.unpack("IB")
+    extra = {}
+    for _ in range(n_extra):
+        tag, off, n = r.unpack("BQQ")
+        if tag not in V2_KNOWN_TAGS:
+            raise ValueError(f"unknown v2 section tag {tag}")
+        extra[tag] = (off, n)
+    entries = [TileEntry(*r.unpack(_TILE_ENTRY_FMT)) for _ in range(n_tiles)]
+    head_crc_expected = zlib.crc32(blob[: r.off]) & 0xFFFFFFFF
+    if r.unpack("I") != head_crc_expected:
+        raise ValueError("corrupt LOPC container (index crc mismatch)")
+    data_off = r.off
+    if n_tiles != int(np.prod(grid)):
+        raise ValueError("corrupt LOPC container (tile count/grid mismatch)")
+    end = max(
+        [e.sub_off + e.sub_len for e in entries]
+        + [off + n for off, n in extra.values()]
+        + [0]
+    )
+    if data_off + end > len(blob):
+        raise ValueError("truncated stream")
+    header = Header(CODES_DTYPE[dtc], shape, eb_mode, eb, eps_abs, flags)
+    return ContainerV2(header, tile_shape, grid, entries, extra, data_off, blob)

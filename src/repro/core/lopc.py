@@ -12,12 +12,18 @@ Guarantees (tested):
 ``preserve_order=False`` degrades LOPC to its underlying guaranteed-bound
 quantizer + PFPL lossless pipeline (the paper's non-topology baseline
 configuration; subbins all zero and skipped in the stream).
+
+This module is a thin single-field wrapper over the tiled, batched
+``repro.engine`` subsystem: ``compress`` writes v2 (tiled) containers
+through the engine's shape-stable device programs, and ``decompress``
+reads both container versions — v1 blobs written by earlier releases
+decode unchanged through the retained legacy path.  Pass
+``container_version=1`` to emit the legacy whole-field format.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
 
-import jax.numpy as jnp
 import numpy as np
 
 from ..codecs import pipeline
@@ -31,12 +37,14 @@ from .quantize import (
 )
 from .subbin import solve_subbins
 
-TAG_BINS = 1
-TAG_SUBBINS = 2
-TAG_NONFINITE = 3
+TAG_BINS = bitstream.TAG_BINS
+TAG_SUBBINS = bitstream.TAG_SUBBINS
+TAG_NONFINITE = bitstream.TAG_NONFINITE
 
-FLAG_ORDER_PRESERVING = 1
-FLAG_HAS_NONFINITE = 2
+FLAG_ORDER_PRESERVING = bitstream.FLAG_ORDER_PRESERVING
+FLAG_HAS_NONFINITE = bitstream.FLAG_HAS_NONFINITE
+
+__all__ = ["CompressStats", "compress", "decompress", "compression_ratio"]
 
 
 @dataclass
@@ -54,7 +62,7 @@ class CompressStats:
         return self.raw_bytes / self.total_bytes
 
 
-def _encode_nonfinite(x: np.ndarray):
+def encode_nonfinite(x: np.ndarray):
     """Sidecar for NaN/Inf cells (real scientific data uses NaN fill
     values — climate ocean masks etc). Cells are replaced by the finite
     mean for compression and restored BIT-EXACTLY on decode. The paper's
@@ -72,7 +80,7 @@ def _encode_nonfinite(x: np.ndarray):
     return filled, w.getvalue()
 
 
-def _decode_nonfinite(payload: bytes, out: np.ndarray) -> np.ndarray:
+def decode_nonfinite(payload: bytes, out: np.ndarray) -> np.ndarray:
     r = bitstream.Reader(payload)
     packed = np.frombuffer(r.lp(), np.uint8)
     vals = np.frombuffer(r.lp(), out.dtype)
@@ -82,6 +90,9 @@ def _decode_nonfinite(payload: bytes, out: np.ndarray) -> np.ndarray:
     return out
 
 
+# the engine is imported lazily inside compress/decompress: core.lopc is
+# a leaf module the engine itself depends on (stats + sidecar helpers)
+
 def compress(
     field: np.ndarray,
     eb: float,
@@ -89,8 +100,28 @@ def compress(
     preserve_order: bool = True,
     solver: str = "auto",
     return_stats: bool = False,
+    container_version: int = bitstream.VERSION_TILED,
+    plan=None,
 ):
     """Compress a 1/2/3-D scalar field. Returns bytes (and stats)."""
+    if container_version == bitstream.VERSION_TILED:
+        from .. import engine as _engine
+
+        return _engine.compress(
+            field, eb, mode, preserve_order, solver,
+            plan=plan, return_stats=return_stats,
+        )
+    if container_version != bitstream.VERSION:
+        raise ValueError(f"unknown container version {container_version}")
+    return _compress_v1(field, eb, mode, preserve_order, solver, return_stats)
+
+
+def _compress_v1(field, eb, mode, preserve_order, solver, return_stats):
+    """Legacy whole-field v1 writer (kept for byte compatibility and as
+    the reference implementation the engine is tested bit-identical to).
+    """
+    import jax.numpy as jnp
+
     x = np.asarray(field)
     if x.dtype not in (np.float32, np.float64):
         raise ValueError(f"LOPC compresses float32/float64 fields, got {x.dtype}")
@@ -100,7 +131,7 @@ def compress(
         raise ValueError("error bound must be positive")
     nonfinite_payload = None
     if not np.isfinite(x).all():
-        x, nonfinite_payload = _encode_nonfinite(x)
+        x, nonfinite_payload = encode_nonfinite(x)
 
     eps_abs = abs_bound_from_mode(x, eb, mode)
     if eps_abs < float(np.finfo(x.dtype).tiny):
@@ -150,7 +181,23 @@ def compress(
 
 
 def decompress(blob: bytes) -> np.ndarray:
-    """Reconstruct the field; embarrassingly parallel (paper §IV-D)."""
+    """Reconstruct the field; embarrassingly parallel (paper §IV-D).
+
+    Dispatches on the container version byte: v2 (tiled) decodes through
+    the engine's per-tile section table; v1 through the legacy
+    whole-field path.
+    """
+    version = bitstream.container_version(blob)
+    if version == bitstream.VERSION_TILED:
+        from .. import engine as _engine
+
+        return _engine.decompress(blob)
+    return _decompress_v1(blob)
+
+
+def _decompress_v1(blob: bytes) -> np.ndarray:
+    import jax.numpy as jnp
+
     header, sections = bitstream.read_container(blob)
     n = int(np.prod(header.shape))
     bdt = bin_dtype_for(header.dtype)
@@ -163,7 +210,7 @@ def decompress(blob: bytes) -> np.ndarray:
         dequantize(jnp.asarray(bins), jnp.asarray(subbins), header.eps_abs, header.dtype)
     )
     if header.flags & FLAG_HAS_NONFINITE:
-        out = _decode_nonfinite(sections[TAG_NONFINITE], out)
+        out = decode_nonfinite(sections[TAG_NONFINITE], out)
     return out
 
 

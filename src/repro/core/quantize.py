@@ -118,12 +118,25 @@ def dequantize(bins: jnp.ndarray, subbins: jnp.ndarray, eps_abs: float, dtype) -
     return _dequantize_impl(bins, subbins, jnp.float64(eps), jnp.dtype(dtype))
 
 
+# f64 bins beyond 2^51 lose exactness in the (b - 0.5) * eps decode-base
+# math (b - 0.5 needs a half-ulp at |b| <= 2^51), which silently breaks
+# the point-wise bound near the int64 bin limit.  The bin domain is
+# therefore capped at the float-exact range, not the integer range.
+F64_EXACT_BIN_LIMIT = 2.0**51
+
+
+def max_abs_bin(dtype) -> float:
+    """Largest |bin| for which the error-bound guarantee holds."""
+    int_limit = float(jnp.iinfo(bin_dtype_for(dtype)).max) * 0.5
+    return min(int_limit, F64_EXACT_BIN_LIMIT)
+
+
 def check_bin_range(x: np.ndarray, eps_abs: float) -> None:
-    """f32 fields use i32 bins; reject inputs whose bins would overflow."""
+    """Reject inputs whose bins would overflow the exact-math domain."""
     dtype = jnp.dtype(x.dtype)
     eps = effective_eps(eps_abs)
     max_bin = float(np.max(np.abs(np.asarray(x, np.float64)))) / eps
-    limit = float(jnp.iinfo(bin_dtype_for(dtype)).max) * 0.5
+    limit = max_abs_bin(dtype)
     if max_bin > limit:
         raise ValueError(
             f"|x|/eps = {max_bin:.3g} overflows {bin_dtype_for(dtype)} bins; "

@@ -13,6 +13,8 @@ All generators are deterministic in (name, shape, seed).
 """
 from __future__ import annotations
 
+import zlib
+
 import numpy as np
 
 
@@ -89,5 +91,8 @@ def make_scientific_field(name: str, shape=None, dtype=None, seed: int = 0) -> n
         gen = name
         assert shape is not None
         dtype = dtype or np.float64
-    rng = np.random.default_rng(abs(hash((name, tuple(shape), seed))) % 2**32)
+    # Stable digest, NOT Python's salted hash(): "deterministic in
+    # (name, shape, seed)" must hold across processes and machines.
+    key = f"{name}|{tuple(shape)}|{seed}".encode()
+    rng = np.random.default_rng(zlib.crc32(key))
     return FIELD_GENERATORS[gen](tuple(shape), rng).astype(dtype)

@@ -1,8 +1,23 @@
-"""Gradient compression with error feedback (distributed-optimization
-trick, DESIGN.md §5): int8 quantization of the gradient stream using the
-same guaranteed-bound quantizer family as LOPC, plus an error-feedback
-accumulator so compression noise does not bias convergence (Karimireddy
-et al., arXiv:1901.09847).
+"""Distributed compression: sharded LOPC tile batches + gradient
+compression with error feedback.
+
+Field compression across a mesh
+-------------------------------
+The engine's tile batches are plain leading-axis arrays, so sharding
+LOPC across devices is just placing that axis over a mesh axis:
+``compress_fields_sharded`` routes ``engine.compress_many`` through a
+``put`` hook that lays every tile batch out with a NamedSharding.  Each
+device then quantizes/solves/encodes its own tiles; only the halo
+exchange (host-side, one cell deep) and the byte assembly touch the
+whole field.  Bytes are identical to the single-device path — the
+engine's programs are schedule-independent — which is what makes the
+sharded path safe to enable anywhere.
+
+Gradient compression (distributed-optimization trick, DESIGN.md §5):
+int8 quantization of the gradient stream using the same guaranteed-bound
+quantizer family as LOPC, plus an error-feedback accumulator so
+compression noise does not bias convergence (Karimireddy et al.,
+arXiv:1901.09847).
 
 Two forms:
   * make_error_feedback_compressor: drop-in grad_transform for
@@ -17,6 +32,38 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from .. import engine
+
+
+# ----------------------------------------------------- sharded tile path
+
+def make_tile_put(mesh, axis: str = "data"):
+    """``put`` hook for engine calls: shard the tile-batch axis.
+
+    Batches whose leading extent does not divide the mesh axis (and
+    scalars/eps vectors) are replicated — correctness never depends on
+    placement, only throughput does.
+    """
+    n = mesh.shape[axis]
+
+    def put(a):
+        a = jnp.asarray(a)
+        spec = P(axis) if (a.ndim >= 1 and a.shape[0] % n == 0) else P()
+        return jax.device_put(a, NamedSharding(mesh, spec))
+
+    return put
+
+
+def compress_fields_sharded(fields, eb, mesh, axis: str = "data", **kw):
+    """engine.compress_many with tile batches sharded across ``axis``.
+
+    Produces byte-identical blobs to the unsharded engine (tested); use
+    a plan whose ``batch_tiles`` is a multiple of the axis size so every
+    batch actually splits.
+    """
+    return engine.compress_many(fields, eb, put=make_tile_put(mesh, axis), **kw)
 
 
 def _quantize_leaf(g: jnp.ndarray):

@@ -1,0 +1,36 @@
+"""Tiled, batched plan/execute compression engine.
+
+Public API:
+
+    plan  = CompressionPlan(tile_shape=(16, 16, 64), batch_tiles=8)
+    blobs = compress_many(fields, eb=1e-2, plan=plan)
+    outs  = decompress_many(blobs)
+    roi   = decompress_roi(blobs[0], (slice(0, 8), slice(4, 20)))
+
+Single-field ``compress``/``decompress`` wrappers exist for convenience;
+``core.lopc`` routes through them.  ``device.TRACE_COUNTS`` /
+``device.trace_count()`` expose the jit-trace probe used to assert shape
+stability.
+"""
+from .engine import (
+    CompressStats,
+    compress,
+    compress_many,
+    decompress,
+    decompress_many,
+    decompress_roi,
+)
+from .plan import CompressionPlan, TileLayout
+from . import device
+
+__all__ = [
+    "CompressionPlan",
+    "TileLayout",
+    "CompressStats",
+    "compress",
+    "compress_many",
+    "decompress",
+    "decompress_many",
+    "decompress_roi",
+    "device",
+]

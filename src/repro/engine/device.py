@@ -1,0 +1,202 @@
+"""Fixed-shape device programs of the execute half of the engine.
+
+Every function here is jitted over arrays whose shapes depend only on
+(batch_tiles, tile_shape, dtype) — never on a field's shape — so the
+whole engine costs a constant number of traces no matter how many
+distinct field shapes flow through it (asserted by the trace-count probe
+in tests).  All math reuses the exact elementwise op sequences of
+core/quantize.py and core/subbin.py, which is what makes the engine
+bit-identical to the legacy whole-field path.
+
+Per-tile error bounds ride along as a (B,) f64 operand (broadcast to
+(B,1,1,1) inside), so one traced program serves tiles of *different
+fields with different bounds* in the same batch — the core of
+``compress_many``'s request coalescing.
+"""
+from __future__ import annotations
+
+from collections import Counter
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..codecs.bitshuffle import bitshuffle, bitunshuffle
+from ..codecs.rze import rze_decode, rze_encode
+from ..codecs.transforms import delta_decode, delta_encode, zigzag_decode, zigzag_encode
+from ..core import topology
+from ..core.floatbits import float_to_ordered, int_dtype_for, ordered_to_float
+from ..core.quantize import bin_dtype_for, decode_base
+
+# Incremented inside traced function bodies: Python side effects run only
+# while tracing, so this counts jit traces, not executions.  Tests use it
+# to assert shape stability across many field shapes.
+TRACE_COUNTS: Counter = Counter()
+
+
+def trace_count() -> int:
+    return sum(TRACE_COUNTS.values())
+
+
+def _interior(x: jnp.ndarray) -> jnp.ndarray:
+    return x[:, 1:-1, 1:-1, 1:-1]
+
+
+def _neighbor(x: jnp.ndarray, off) -> jnp.ndarray:
+    """Shifted interior view of a (B, t0+2, t1+2, t2+2) haloed batch."""
+    sl = tuple(
+        slice(1 + int(o), d - 1 + int(o)) for o, d in zip(off, x.shape[1:])
+    )
+    return x[(slice(None),) + sl]
+
+
+def _relax_batch(sub_h: jnp.ndarray, flags: jnp.ndarray):
+    """One Jacobi sweep over tile interiors, halos held fixed.
+
+    Same per-point update as core.subbin._relax_once; neighbor reads come
+    from the haloed state so cross-tile constraints are honored once the
+    halos carry neighbor-tile interiors.
+    """
+    offs = topology.offsets(3)
+    ties = topology.tie_breaker(3)
+    cur = _interior(sub_h)
+    new = cur
+    for k, off in enumerate(offs):
+        nsub = _neighbor(sub_h, off)
+        need = topology.flags_to_bit(flags, k).astype(jnp.bool_)
+        cand = nsub + np.int32(ties[k]).astype(sub_h.dtype)
+        new = jnp.maximum(new, jnp.where(need, cand, 0))
+    return sub_h.at[:, 1:-1, 1:-1, 1:-1].set(new), new != cur
+
+
+def _local_solve(sub_h: jnp.ndarray, flags: jnp.ndarray, max_iters):
+    """Iterate tile-local sweeps to convergence (halos fixed)."""
+
+    def cond(c):
+        _, changed, it = c
+        return changed & (it < max_iters)
+
+    def body(c):
+        sub, _, it = c
+        new, ch = _relax_batch(sub, flags)
+        return new, jnp.any(ch), it + 1
+
+    sub1, ch1 = _relax_batch(sub_h, flags)
+    sub, _, iters = jax.lax.while_loop(
+        cond, body, (sub1, jnp.any(ch1), jnp.int64(1))
+    )
+    return sub, iters
+
+
+def _quantize_halo(x_h: jnp.ndarray, eps_b: jnp.ndarray, dtype) -> jnp.ndarray:
+    """core.quantize._quantize_impl with a per-tile broadcast eps."""
+    bdt = bin_dtype_for(dtype)
+    xf = x_h.astype(jnp.float64)
+    b = jnp.round(xf / eps_b).astype(bdt)
+    for _ in range(2):
+        too_high = x_h < decode_base(b, eps_b, dtype)
+        too_low = x_h >= decode_base(b + 1, eps_b, dtype)
+        b = b - too_high.astype(bdt) + too_low.astype(bdt)
+    return b
+
+
+@partial(jax.jit, static_argnames=("dtype", "preserve_order", "max_iters"))
+def frontend(x_h, valid_h, eps, dtype, preserve_order: bool, max_iters: int):
+    """Fused per-tile-batch frontend: quantize -> order flags -> local
+    subbin solve.
+
+    x_h     (B, t0+2, t1+2, t2+2)  field values, 0 where invalid
+    valid_h (B, t0+2, t1+2, t2+2)  True on real field cells
+    eps     (B,) f64               effective eps per tile
+
+    Returns (bins_enc (B,*t), flags (B,*t) u32, sub_h (B,*t+2), sweeps).
+    Cells outside the field (pad or beyond a boundary) carry the same
+    sentinel bin / +inf value the legacy path uses for out-of-grid
+    neighbors, so interior flags equal the whole-field computation.
+    """
+    TRACE_COUNTS["frontend"] += 1
+    eps_b = eps[:, None, None, None]
+    bins_h = _quantize_halo(x_h, eps_b, dtype)
+    sentinel = jnp.iinfo(bins_h.dtype).min
+    bins_h = jnp.where(valid_h, bins_h, sentinel)
+    vals_h = jnp.where(valid_h, x_h, jnp.asarray(jnp.inf, x_h.dtype))
+
+    offs = topology.offsets(3)
+    bc = _interior(bins_h)
+    vc = _interior(vals_h)
+    flags = jnp.zeros(bc.shape, jnp.uint32)
+    for k, off in enumerate(offs):
+        nb = _neighbor(bins_h, off)
+        nv = _neighbor(vals_h, off)
+        bit = (nb == bc) & topology.sos_less(nv, vc, k, 3)
+        flags = flags | (bit.astype(jnp.uint32) << np.uint32(k))
+
+    bins_enc = jnp.where(_interior(valid_h), bc, 0)
+    sub_dt = jnp.int32 if bins_h.dtype == jnp.int32 else jnp.int64
+    sub_h = jnp.zeros(bins_h.shape, sub_dt)
+    if preserve_order:
+        sub_h, sweeps = _local_solve(sub_h, flags, jnp.int64(max_iters))
+    else:
+        sweeps = jnp.int64(0)
+    return bins_enc, flags, sub_h, sweeps
+
+
+@partial(jax.jit, static_argnames=("max_iters",))
+def relax_round(sub_h, flags, max_iters: int):
+    """One halo-exchange round: re-solve tiles locally against fresh
+    halos.  Returns (new sub_h, changed-any scalar)."""
+    TRACE_COUNTS["relax"] += 1
+    before = _interior(sub_h)
+    new, _ = _local_solve(sub_h, flags, jnp.int64(max_iters))
+    return new, jnp.any(_interior(new) != before)
+
+
+@partial(jax.jit, static_argnames=("chunk_len", "use_delta"))
+def encode_tiles(ints: jnp.ndarray, chunk_len: int, use_delta: bool):
+    """(B, E) ints -> per-chunk RZE streams, chunks grouped per tile.
+
+    Each tile occupies ceil(E/chunk_len) consecutive chunk rows, so the
+    host can slice out independent per-tile sections (the v2 container's
+    unit of parallel decode).  Same stage order as codecs.pipeline:
+    [delta ->] zigzag|reinterpret -> BIT_w -> RZE_w.
+    """
+    TRACE_COUNTS["encode"] += 1
+    b, e = ints.shape
+    n_chunks = -(-e // chunk_len)
+    padded = jnp.pad(ints, ((0, 0), (0, n_chunks * chunk_len - e)))
+    chunks = padded.reshape(b * n_chunks, chunk_len)
+    if use_delta:
+        words = zigzag_encode(delta_encode(chunks))
+    else:
+        words = chunks.astype(
+            jnp.dtype(jnp.dtype(chunks.dtype).str.replace("i", "u"))
+        )
+    shuffled = bitshuffle(words)
+    return rze_encode(shuffled)
+
+
+@partial(jax.jit, static_argnames=("tile_elems", "use_delta", "out_dtype"))
+def decode_tiles(bitmap, packed, tile_elems: int, use_delta: bool, out_dtype):
+    """Inverse of encode_tiles -> (B, tile_elems) ints."""
+    TRACE_COUNTS["decode"] += 1
+    shuffled = rze_decode(bitmap, packed)
+    words = bitunshuffle(shuffled)
+    if use_delta:
+        chunks = delta_decode(zigzag_decode(words))
+    else:
+        chunks = words.astype(out_dtype)
+    rows, chunk_len = chunks.shape
+    n_chunks = -(-tile_elems // chunk_len)
+    b = rows // n_chunks
+    return chunks.astype(out_dtype).reshape(b, n_chunks * chunk_len)[:, :tile_elems]
+
+
+@partial(jax.jit, static_argnames=("dtype",))
+def dequantize_tiles(bins, subbins, eps, dtype):
+    """(B, *tile) bins+subbins -> reconstructed values, per-tile eps."""
+    TRACE_COUNTS["dequantize"] += 1
+    eps_b = eps[:, None, None, None]
+    base = decode_base(bins, eps_b, dtype)
+    idt = int_dtype_for(dtype)
+    return ordered_to_float(float_to_ordered(base) + subbins.astype(idt), dtype)

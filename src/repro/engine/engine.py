@@ -1,0 +1,552 @@
+"""Plan/execute compression engine (batched tiled LOPC).
+
+``compress_many`` turns any mix of concurrent 1/2/3-D field requests
+into shared fixed-shape tile batches:
+
+  plan      pad + partition each field into one canonical tile shape,
+            with a one-cell halo so order constraints crossing tile
+            boundaries stay visible to the subbin solver
+  execute   a fused device program per tile batch (quantize -> order
+            flags -> tile-local subbin fixed point), then halo-exchange
+            relax rounds to the *global* least fixed point, then the
+            lossless pipeline (delta/zigzag/BIT/RZE) per tile batch
+  serialize the v2 container: an indexed per-tile section table that
+            decodes embarrassingly parallel, including partial
+            region-of-interest reads (``decompress_roi``)
+
+Because the subbin solution is the least fixed point of a monotone
+system, tile-local convergence plus halo exchange lands on exactly the
+same integers as the legacy whole-field solve — the engine is
+bit-identical to ``core.lopc`` on every input (tested), it just gets
+there with shape-stable programs: one jit trace per (tile_shape, dtype)
+instead of one per field shape.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import bitstream
+from ..core.lopc import CompressStats, decode_nonfinite, encode_nonfinite
+from ..core.quantize import (
+    abs_bound_from_mode,
+    bin_dtype_for,
+    check_bin_range,
+    effective_eps,
+)
+from . import device
+from .plan import (
+    HALO,
+    CompressionPlan,
+    TileLayout,
+    canonical3d_shape,
+    extract_halo_tiles,
+    gather_interiors,
+    padded_with_border,
+    scatter_interiors,
+    tiles_for_region,
+)
+
+FLAG_ORDER_PRESERVING = bitstream.FLAG_ORDER_PRESERVING
+FLAG_HAS_NONFINITE = bitstream.FLAG_HAS_NONFINITE
+
+_SOLVERS = ("auto", "jacobi", "frontier", "blockwise")
+
+DEFAULT_PLAN = CompressionPlan()
+
+_CHUNK_WORDS = {4: 4096, 8: 2048}  # word bytes -> words per 16 KiB chunk
+
+
+# -------------------------------------------- nonfinite sidecar (ROI form)
+
+def decode_nonfinite_region(payload: bytes, out_region: np.ndarray,
+                            full_shape: tuple[int, ...],
+                            region: tuple[slice, ...]) -> np.ndarray:
+    """ROI variant: the sidecar indexes the full grid, so the mask and
+    value streams are sliced down to the requested region."""
+    r = bitstream.Reader(payload)
+    packed = np.frombuffer(r.lp(), np.uint8)
+    vals = np.frombuffer(r.lp(), out_region.dtype)
+    n = int(np.prod(full_shape))
+    mask = np.unpackbits(packed, count=n).astype(bool).reshape(full_shape)
+    # value k of the sidecar belongs to the k-th masked cell in C order
+    pos = np.cumsum(mask.reshape(-1)).reshape(full_shape) - 1
+    m = mask[region]
+    out_region = out_region.copy()
+    out_region[m] = vals[pos[region][m]]
+    return out_region
+
+
+# ------------------------------------------------------------ validation
+
+def _validate(x: np.ndarray, eb: float):
+    if x.dtype not in (np.float32, np.float64):
+        raise ValueError(f"LOPC compresses float32/float64 fields, got {x.dtype}")
+    if x.ndim not in (1, 2, 3):
+        raise ValueError(f"LOPC supports 1D/2D/3D grids, got ndim={x.ndim}")
+    if eb <= 0:
+        raise ValueError("error bound must be positive")
+
+
+def _check_eps(x: np.ndarray, eps_abs: float):
+    if eps_abs < float(np.finfo(x.dtype).tiny):
+        raise ValueError(
+            f"error bound {eps_abs:.3e} is below the smallest normal "
+            f"{x.dtype} ({np.finfo(x.dtype).tiny:.3e}); XLA flushes "
+            "denormals (FTZ), so sub-denormal bin widths cannot be honored"
+        )
+    check_bin_range(x, eps_abs)
+
+
+def _chunks_per_tile(layout: TileLayout, bdt) -> tuple[int, int]:
+    """-> (chunks per tile, chunk length in words)."""
+    chunk_len = _CHUNK_WORDS[np.dtype(bdt).itemsize]
+    return -(-layout.tile_elems // chunk_len), chunk_len
+
+
+# -------------------------------------------------------------- compress
+
+class _Request:
+    """One field moving through a compress_many call."""
+
+    def __init__(self, x, eb, mode, plan):
+        x = np.asarray(x)
+        _validate(x, eb)
+        self.nonfinite = None
+        if not np.isfinite(x).all():
+            x, self.nonfinite = encode_nonfinite(x)
+        self.x = x
+        self.eb = float(eb)
+        self.mode = mode
+        self.eps_abs = abs_bound_from_mode(x, eb, mode)
+        _check_eps(x, self.eps_abs)
+        self.eps_eff = effective_eps(self.eps_abs)
+        self.layout = plan.layout_for(x.shape)
+        self.sub_pb = None  # padded+border global subbin state
+        self.sweeps = 0
+
+
+def _batched(n, batch):
+    """Slice [start, stop) pairs covering n items in fixed-size batches."""
+    return [(i, min(i + batch, n)) for i in range(0, n, batch)]
+
+
+def _pad_batch(arr: np.ndarray, batch: int, fill=0):
+    if arr.shape[0] == batch:
+        return arr
+    pad = np.full((batch - arr.shape[0],) + arr.shape[1:], fill, arr.dtype)
+    return np.concatenate([arr, pad], axis=0)
+
+
+def _serialize_tile_sections(bitmap, packed, counts, n_tiles, cpt):
+    """Split batched chunk rows into per-tile RZE sections."""
+    bitmap = np.asarray(bitmap)
+    packed = np.asarray(packed)
+    counts = np.asarray(counts)
+    out = []
+    for j in range(n_tiles):
+        rows = slice(j * cpt, (j + 1) * cpt)
+        out.append(
+            bitstream.serialize_rze_section(
+                bitmap[rows], packed[rows], counts[rows]
+            )
+        )
+    return out
+
+
+def compress_many(
+    fields,
+    eb,
+    mode: str = "noa",
+    preserve_order: bool = True,
+    solver: str = "auto",
+    plan: CompressionPlan | None = None,
+    return_stats: bool = False,
+    put=None,
+):
+    """Compress a batch of scalar fields into v2 containers.
+
+    ``fields`` may mix shapes, ranks, and dtypes; ``eb`` is one bound or
+    a per-field sequence.  Tiles of all requests are coalesced into
+    shared fixed-shape device batches (grouped by (dtype, tile_shape)),
+    which is both the throughput path and what keeps jit traces constant
+    across arbitrary request mixes.  ``put`` optionally places each
+    device batch (e.g. a NamedSharding put from distributed.compression).
+
+    Returns a list of blobs, or (blobs, stats) when ``return_stats``.
+    """
+    if solver not in _SOLVERS:
+        raise ValueError(f"unknown solver method {solver!r}")
+    # All tile-local schedules converge to the same least fixed point
+    # (the paper's schedule-independence), so every solver name maps to
+    # the engine's blockwise-local schedule and produces identical bytes.
+    plan = plan or DEFAULT_PLAN
+    fields = list(fields)
+    ebs = list(eb) if np.ndim(eb) else [eb] * len(fields)
+    if len(ebs) != len(fields):
+        raise ValueError("eb must be a scalar or one bound per field")
+    reqs = [_Request(x, e, mode, plan) for x, e in zip(fields, ebs)]
+    put = put or (lambda a: jnp.asarray(a))
+
+    groups: dict[tuple, list[int]] = {}
+    for i, r in enumerate(reqs):
+        groups.setdefault((np.dtype(r.x.dtype), r.layout.tile), []).append(i)
+
+    blobs: list[bytes | None] = [None] * len(reqs)
+    stats: list[CompressStats | None] = [None] * len(reqs)
+    for (dtype, tile), members in groups.items():
+        _compress_group(
+            [reqs[i] for i in members], dtype, plan, preserve_order, put,
+            [blobs, stats], members, return_stats,
+        )
+    if return_stats:
+        return blobs, stats
+    return blobs
+
+
+def _compress_group(reqs, dtype, plan, preserve_order, put, out, members,
+                    return_stats):
+    blobs, stats = out
+    batch = plan.batch_tiles
+    bdt = bin_dtype_for(dtype)
+    sub_np = np.int32 if np.dtype(bdt) == np.int32 else np.int64
+    layout0 = reqs[0].layout
+    tile = layout0.tile
+    tile_elems = layout0.tile_elems
+    max_iters = tile_elems + 2
+    cpt, chunk_len = _chunks_per_tile(layout0, bdt)
+
+    # ---- plan: tiles of every request, concatenated (shared batches)
+    x_tiles, valid_tiles, eps_tiles, ranges = [], [], [], []
+    n_total = 0
+    for r in reqs:
+        arr3 = r.x.reshape(r.layout.canonical)
+        x_pb = padded_with_border(arr3, r.layout, arr3.dtype.type(0))
+        v_pb = padded_with_border(
+            np.ones(r.layout.canonical, bool), r.layout, False
+        )
+        x_tiles.append(extract_halo_tiles(x_pb, r.layout))
+        valid_tiles.append(extract_halo_tiles(v_pb, r.layout))
+        eps_tiles.append(np.full(r.layout.n_tiles, r.eps_eff, np.float64))
+        ranges.append((n_total, n_total + r.layout.n_tiles))
+        n_total += r.layout.n_tiles
+    x_all = np.concatenate(x_tiles)
+    v_all = np.concatenate(valid_tiles)
+    eps_all = np.concatenate(eps_tiles)
+
+    # ---- execute: fused frontend per tile batch
+    bins_all = np.empty((n_total,) + tile, np.dtype(bdt))
+    flags_all = np.empty((n_total,) + tile, np.uint32)
+    sub_h_all = np.empty((n_total,) + layout0.halo_tile, sub_np)
+    for lo, hi in _batched(n_total, batch):
+        bins_b, flags_b, sub_b, sw = device.frontend(
+            put(_pad_batch(x_all[lo:hi], batch)),
+            put(_pad_batch(v_all[lo:hi], batch)),
+            put(_pad_batch(eps_all[lo:hi], batch, 1.0)),
+            jnp.dtype(dtype),
+            preserve_order,
+            max_iters,
+        )
+        n = hi - lo
+        bins_all[lo:hi] = np.asarray(bins_b)[:n]
+        flags_all[lo:hi] = np.asarray(flags_b)[:n]
+        sub_h_all[lo:hi] = np.asarray(sub_b)[:n]
+        # attribute the batch's local sweep count to every request with
+        # tiles in this batch (a shared while_loop runs to the slowest
+        # tile; per-request counts are schedule diagnostics, like the
+        # legacy path's)
+        for r, (rlo, rhi) in zip(reqs, ranges):
+            if rlo < hi and rhi > lo:
+                r.sweeps = max(r.sweeps, int(sw))
+
+    # ---- halo-exchange rounds to the global least fixed point
+    if preserve_order:
+        for r, (lo, hi) in zip(reqs, ranges):
+            r.sub_pb = padded_with_border(
+                np.zeros(r.layout.canonical, sub_np), r.layout, sub_np(0)
+            )
+            scatter_interiors(
+                sub_h_all[lo:hi][:, HALO:-HALO, HALO:-HALO, HALO:-HALO],
+                r.layout, r.sub_pb,
+            )
+        # Fields are independent (halos only couple tiles of the same
+        # field), so each converges on its own: single-tile fields are
+        # already done after the frontend, and a field whose round
+        # changes nothing is done forever (monotone iteration) — drop
+        # both from subsequent rounds instead of re-solving the world.
+        active = [(r, lo, hi) for r, (lo, hi) in zip(reqs, ranges)
+                  if r.layout.n_tiles > 1]
+        while active:
+            sub_tiles = np.concatenate(
+                [extract_halo_tiles(r.sub_pb, r.layout) for r, _, _ in active]
+            )
+            flags_act = np.concatenate([flags_all[lo:hi] for _, lo, hi in active])
+            n_act = sub_tiles.shape[0]
+            new_sub = np.empty_like(sub_tiles)
+            for lo, hi in _batched(n_act, batch):
+                out_b, _ = device.relax_round(
+                    put(_pad_batch(sub_tiles[lo:hi], batch)),
+                    put(_pad_batch(flags_act[lo:hi], batch)),
+                    max_iters,
+                )
+                new_sub[lo:hi] = np.asarray(out_b)[: hi - lo]
+            still = []
+            off = 0
+            for r, flo, fhi in active:
+                k = r.layout.n_tiles
+                seg_new = new_sub[off : off + k][:, HALO:-HALO, HALO:-HALO, HALO:-HALO]
+                seg_old = sub_tiles[off : off + k][:, HALO:-HALO, HALO:-HALO, HALO:-HALO]
+                if not np.array_equal(seg_new, seg_old):
+                    r.sweeps += 1  # this field advanced in this round
+                    scatter_interiors(seg_new, r.layout, r.sub_pb)
+                    still.append((r, flo, fhi))
+                off += k
+            active = still
+        sub_all = np.concatenate(
+            [gather_interiors(r.sub_pb, r.layout) for r in reqs]
+        ).astype(sub_np)
+    else:
+        sub_all = None
+
+    # ---- lossless pipeline per tile batch, then per-tile serialization
+    bins_sections = [None] * n_total
+    sub_sections = [b""] * n_total
+    for lo, hi in _batched(n_total, batch):
+        bitmap, packed, counts = device.encode_tiles(
+            put(_pad_batch(bins_all[lo:hi], batch).reshape(batch, tile_elems)),
+            chunk_len, True,
+        )
+        n = hi - lo
+        bins_sections[lo:hi] = _serialize_tile_sections(
+            bitmap, packed, counts, n, cpt
+        )
+        if preserve_order:
+            bitmap, packed, counts = device.encode_tiles(
+                put(_pad_batch(sub_all[lo:hi], batch).reshape(batch, tile_elems)),
+                chunk_len, False,
+            )
+            sub_sections[lo:hi] = _serialize_tile_sections(
+                bitmap, packed, counts, n, cpt
+            )
+
+    # ---- serialize one v2 container per request
+    for r, (lo, hi), i in zip(reqs, ranges, members):
+        flags = FLAG_ORDER_PRESERVING if preserve_order else 0
+        extra = {}
+        if r.nonfinite is not None:
+            flags |= FLAG_HAS_NONFINITE
+            extra[bitstream.TAG_NONFINITE] = r.nonfinite
+        header = bitstream.Header(
+            dtype=np.dtype(dtype), shape=r.x.shape, eb_mode=r.mode,
+            eb=r.eb, eps_abs=float(r.eps_abs), flags=flags,
+        )
+        tiles = list(zip(bins_sections[lo:hi], sub_sections[lo:hi]))
+        blob = bitstream.write_container_v2(
+            header, tile, r.layout.grid, tiles, extra
+        )
+        blobs[i] = blob
+        if return_stats:
+            bin_bytes = sum(len(b) for b, _ in tiles)
+            subbin_bytes = sum(len(s) for _, s in tiles)
+            stats[i] = CompressStats(
+                raw_bytes=r.x.nbytes,
+                total_bytes=len(blob),
+                bin_bytes=bin_bytes,
+                subbin_bytes=subbin_bytes,
+                header_bytes=len(blob) - bin_bytes - subbin_bytes,
+                n_sweeps=r.sweeps,
+                eps_abs=float(r.eps_abs),
+            )
+
+
+def compress(field, eb, mode="noa", preserve_order=True, solver="auto",
+             plan=None, return_stats=False, put=None):
+    """Single-field convenience wrapper over :func:`compress_many`."""
+    out = compress_many([field], eb, mode, preserve_order, solver, plan,
+                        return_stats, put)
+    if return_stats:
+        blobs, stats = out
+        return blobs[0], stats[0]
+    return out[0]
+
+
+# ------------------------------------------------------------ decompress
+
+def _decode_items(items, tile, dtype, order: bool, batch: int):
+    """Decode a mixed tile work-list -> values (n, *tile).
+
+    ``items`` is a list of (container, tile_id, eps_eff) sharing one
+    (tile shape, dtype, order) signature — tiles of *different blobs*
+    ride the same fixed-shape device batches, mirroring compress_many's
+    request coalescing (eps is a per-tile runtime operand).
+    """
+    dtype = np.dtype(dtype)
+    bdt = np.dtype(bin_dtype_for(dtype))
+    tile_elems = int(np.prod(tile))
+    chunk_len = _CHUNK_WORDS[bdt.itemsize]
+    cpt = -(-tile_elems // chunk_len)
+    udt = bdt.str.replace("i", "u")
+    n = len(items)
+    values = np.empty((n,) + tuple(tile), dtype)
+    zero_bitmap = np.zeros((cpt, chunk_len // (bdt.itemsize * 8)), udt)
+    zero_packed = np.zeros((cpt, chunk_len), udt)
+    for lo, hi in _batched(n, batch):
+        bmaps, packs, sub_bmaps, sub_packs = [], [], [], []
+        eps = np.ones(batch, np.float64)
+        for j, (c, t, eps_eff) in enumerate(items[lo:hi]):
+            eps[j] = eps_eff
+            bins_b, sub_b = c.tile_payloads(t)
+            bm, pk = bitstream.deserialize_rze_section(bins_b)
+            bmaps.append(bm)
+            packs.append(pk)
+            if order:
+                bm, pk = bitstream.deserialize_rze_section(sub_b)
+                sub_bmaps.append(bm)
+                sub_packs.append(pk)
+        while len(bmaps) < batch:  # pad to the fixed batch extent
+            bmaps.append(zero_bitmap)
+            packs.append(zero_packed)
+            if order:
+                sub_bmaps.append(zero_bitmap)
+                sub_packs.append(zero_packed)
+        bins = device.decode_tiles(
+            jnp.asarray(np.concatenate(bmaps)),
+            jnp.asarray(np.concatenate(packs)),
+            tile_elems, True, jnp.dtype(bdt),
+        ).reshape((batch,) + tuple(tile))
+        if order:
+            subs = device.decode_tiles(
+                jnp.asarray(np.concatenate(sub_bmaps)),
+                jnp.asarray(np.concatenate(sub_packs)),
+                tile_elems, False, jnp.dtype(bdt),
+            ).reshape((batch,) + tuple(tile))
+        else:
+            subs = jnp.zeros((batch,) + tuple(tile), jnp.dtype(bdt))
+        out = device.dequantize_tiles(
+            bins, subs, jnp.asarray(eps), jnp.dtype(dtype)
+        )
+        values[lo:hi] = np.asarray(out)[: hi - lo]
+    return values
+
+
+def _decode_tile_batch(c: bitstream.ContainerV2, tile_ids, layout, plan):
+    """Decode a set of one container's tiles -> values (n, *tile)."""
+    order = bool(c.header.flags & FLAG_ORDER_PRESERVING)
+    eps_eff = effective_eps(c.header.eps_abs)
+    items = [(c, t, eps_eff) for t in tile_ids]
+    return _decode_items(items, layout.tile, c.header.dtype, order,
+                         plan.batch_tiles)
+
+
+def _layout_of(c: bitstream.ContainerV2, plan) -> TileLayout:
+    canonical = canonical3d_shape(c.header.shape)
+    layout = TileLayout(tuple(c.header.shape), canonical,
+                        tuple(int(t) for t in c.tile_shape),
+                        tuple(int(g) for g in c.grid))
+    expected = tuple(-(-cd // t) for cd, t in zip(canonical, layout.tile))
+    if layout.grid != expected or layout.n_tiles != c.n_tiles:
+        raise ValueError("corrupt LOPC container (grid/shape mismatch)")
+    return layout
+
+
+def decompress(blob: bytes, plan: CompressionPlan | None = None) -> np.ndarray:
+    """Reconstruct a full field from a v2 container.
+
+    Tiles are independent sections (own crc, own RZE streams), so this
+    decode is embarrassingly parallel; here they run as fixed-shape
+    device batches.
+    """
+    plan = plan or DEFAULT_PLAN
+    c = bitstream.read_container_v2(blob)
+    layout = _layout_of(c, plan)
+    values = _decode_tile_batch(c, list(range(layout.n_tiles)), layout, plan)
+    return _assemble_field(values, c, layout)
+
+
+def _assemble_field(values, c: bitstream.ContainerV2, layout: TileLayout):
+    """Scatter decoded tile interiors back into the original field."""
+    pb = np.zeros(tuple(d + 2 * HALO for d in layout.padded), values.dtype)
+    scatter_interiors(values, layout, pb)
+    padded = pb[HALO:-HALO, HALO:-HALO, HALO:-HALO]
+    cn = layout.canonical
+    out = np.ascontiguousarray(
+        padded[: cn[0], : cn[1], : cn[2]]
+    ).reshape(c.header.shape)
+    if c.header.flags & FLAG_HAS_NONFINITE:
+        out = decode_nonfinite(c.extra_section(bitstream.TAG_NONFINITE), out)
+    return out
+
+
+def decompress_many(blobs, plan: CompressionPlan | None = None):
+    """Batched decode: tiles of all containers with one (tile_shape,
+    dtype, order) signature share device batches — the decode-side
+    mirror of compress_many's request coalescing."""
+    plan = plan or DEFAULT_PLAN
+    parsed = []
+    for b in blobs:
+        c = bitstream.read_container_v2(b)
+        parsed.append((c, _layout_of(c, plan)))
+    groups: dict[tuple, list[int]] = {}
+    for i, (c, layout) in enumerate(parsed):
+        order = bool(c.header.flags & FLAG_ORDER_PRESERVING)
+        groups.setdefault((np.dtype(c.header.dtype), layout.tile, order),
+                          []).append(i)
+    outs: list[np.ndarray | None] = [None] * len(parsed)
+    for (dtype, tile, order), members in groups.items():
+        items, spans = [], []
+        for i in members:
+            c, layout = parsed[i]
+            eps_eff = effective_eps(c.header.eps_abs)
+            start = len(items)
+            items.extend((c, t, eps_eff) for t in range(layout.n_tiles))
+            spans.append((i, start, len(items)))
+        values = _decode_items(items, tile, dtype, order, plan.batch_tiles)
+        for i, lo, hi in spans:
+            c, layout = parsed[i]
+            outs[i] = _assemble_field(values[lo:hi], c, layout)
+    return outs
+
+
+def decompress_roi(blob: bytes, region: tuple[slice, ...],
+                   plan: CompressionPlan | None = None) -> np.ndarray:
+    """Partial decode: reconstruct only ``region`` of the field.
+
+    Touches exactly the tiles intersecting the region (the v2 index makes
+    them addressable without scanning the stream).
+    """
+    plan = plan or DEFAULT_PLAN
+    c = bitstream.read_container_v2(blob)
+    layout = _layout_of(c, plan)
+    tile_ids = tiles_for_region(layout, region)
+    shape = c.header.shape
+    # empty/reversed slices clamp to zero extent (numpy slicing semantics)
+    canon_region = (slice(0, 1),) * (3 - len(region)) + tuple(
+        slice(sl.indices(n)[0], max(sl.indices(n)[0], sl.indices(n)[1]))
+        for sl, n in zip(region, shape)
+    )
+    out_shape = tuple(sl.stop - sl.start for sl in canon_region)
+    out = np.empty(out_shape, np.dtype(c.header.dtype))
+    if not tile_ids:
+        return out.reshape(tuple(s for s in out_shape[3 - len(region):]))
+    values = _decode_tile_batch(c, tile_ids, layout, plan)
+    g1, g2 = layout.grid[1], layout.grid[2]
+    t = layout.tile
+    for v, tid in zip(values, tile_ids):
+        gi, rem = divmod(tid, g1 * g2)
+        gj, gk = divmod(rem, g2)
+        t0, t1, t2 = gi * t[0], gj * t[1], gk * t[2]
+        src, dst = [], []
+        for base, extent, sl in zip((t0, t1, t2), t, canon_region):
+            lo = max(base, sl.start)
+            hi = min(base + extent, sl.stop)
+            src.append(slice(lo - base, hi - base))
+            dst.append(slice(lo - sl.start, hi - sl.start))
+        out[tuple(dst)] = v[tuple(src)]
+    final_shape = out_shape[3 - len(region):]
+    out = out.reshape(final_shape)
+    if c.header.flags & FLAG_HAS_NONFINITE:
+        out = decode_nonfinite_region(
+            c.extra_section(bitstream.TAG_NONFINITE), out, shape,
+            tuple(slice(*sl.indices(n)[:2]) for sl, n in zip(region, shape)),
+        )
+    return out

@@ -26,7 +26,9 @@ def _rze_kernel(x_ref, bitmap_ref, counts_ref):
     shifts = jnp.uint32(WORD_BITS - 1) - iota
     grouped = nz.reshape(nb, per, WORD_BITS)
     bitmap_ref[...] = jnp.sum(grouped << shifts[None, None, :], axis=-1, dtype=jnp.uint32)
-    counts_ref[...] = jnp.sum(nz.astype(jnp.int32), axis=1, keepdims=True)
+    # dtype pinned: with jax_enable_x64 a bare int32 sum accumulates in
+    # int64, which the int32 output ref rejects
+    counts_ref[...] = jnp.sum(nz, axis=1, keepdims=True, dtype=jnp.int32)
 
 
 def rze_bitmap_u32(words: jnp.ndarray, interpret: bool = False):

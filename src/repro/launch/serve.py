@@ -1,7 +1,18 @@
-"""Serving launcher: batched prefill+decode with optional int8 KV cache.
+"""Serving launcher: LLM batched prefill+decode, plus the LOPC
+compression service.
+
+LLM mode (unchanged):
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b \
       --reduced --requests 4 --prompt-len 48 --gen 16 --kv-quant
+
+Compression-service mode — concurrent field-compression requests of
+mixed shapes/ranks are coalesced by the engine into shared fixed-shape
+tile batches (one jit trace per tile shape, regardless of the request
+mix), then decoded back tile-parallel:
+
+  PYTHONPATH=src python -m repro.launch.serve --compress-service \
+      --requests 12 --eb 1e-2 --tile 16,16,64 --batch-tiles 8
 """
 from __future__ import annotations
 
@@ -10,23 +21,79 @@ import time
 
 import jax
 import jax.numpy as jnp
-
-from repro.models.config import reduced_for_smoke
-from repro.models.inputs import dummy_batch
-from repro.models.model import decode_step, init_params, prefill
-from repro.models.registry import ARCHITECTURES, get_arch
+import numpy as np
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True, choices=ARCHITECTURES)
-    ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--requests", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=48)
-    ap.add_argument("--gen", type=int, default=16)
-    ap.add_argument("--kv-quant", action="store_true",
-                    help="int8 KV cache (paper-technique quantization)")
-    args = ap.parse_args()
+def serve_compression(args):
+    """Simulate a steady stream of mixed-shape compression requests
+    against ONE shared CompressionPlan (the production configuration:
+    trace once, serve everything)."""
+    from repro import engine
+    from repro.data.fields import make_scientific_field
+
+    tile = None
+    if args.tile:
+        try:
+            tile = tuple(int(t) for t in args.tile.split(","))
+            if len(tile) != 3 or min(tile) < 1:
+                raise ValueError
+        except ValueError:
+            raise SystemExit(
+                f"--tile wants three positive ints 't0,t1,t2', got {args.tile!r}"
+            )
+    plan = engine.CompressionPlan(tile_shape=tile, batch_tiles=args.batch_tiles)
+
+    rng = np.random.default_rng(0)
+    names = ["gaussians", "turbulence", "waves", "front"]
+    fields = []
+    for i in range(args.requests):
+        shape = tuple(int(rng.integers(12, 40)) for _ in range(3))
+        fields.append(
+            make_scientific_field(names[i % len(names)], shape,
+                                  np.float64 if i % 2 else np.float32, seed=i)
+        )
+    total_mb = sum(x.nbytes for x in fields) / 1e6
+
+    # warm-up traces every (tile_shape, dtype) program the mix needs
+    # (with auto tiling different request shapes can bucket to several
+    # tile shapes), so the timed run below measures execution only
+    engine.decompress_many(engine.compress_many(fields, args.eb, plan=plan),
+                           plan=plan)
+    t0 = time.perf_counter()
+    blobs, stats = engine.compress_many(fields, args.eb, plan=plan,
+                                        return_stats=True)
+    t_c = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    outs = engine.decompress_many(blobs, plan=plan)
+    t_d = time.perf_counter() - t0
+
+    for x, y, s in zip(fields, outs, stats):
+        bound = args.eb * (float(x.max()) - float(x.min()))
+        assert np.abs(x.astype(np.float64) - y.astype(np.float64)).max() <= bound
+    ratio = sum(x.nbytes for x in fields) / sum(len(b) for b in blobs)
+    print(f"compression service: {args.requests} requests "
+          f"({total_mb:.2f} MB mixed f32/f64, shapes coalesced into "
+          f"shared tile batches)")
+    print(f"  compress   {total_mb / t_c:8.1f} MB/s  ({t_c * 1e3:.0f} ms)")
+    print(f"  decompress {total_mb / t_d:8.1f} MB/s  ({t_d * 1e3:.0f} ms)")
+    print(f"  ratio      {ratio:8.2f}x   traces {engine.device.trace_count()}")
+
+    # region-of-interest decode: the v2 tile index pays off
+    x = fields[0]
+    roi = tuple(slice(2, min(10, n)) for n in x.shape)
+    t0 = time.perf_counter()
+    sub = engine.decompress_roi(blobs[0], roi)
+    t_roi = time.perf_counter() - t0
+    assert sub.shape == tuple(s.stop - s.start for s in roi)
+    print(f"  ROI decode {str(tuple(f'{s.start}:{s.stop}' for s in roi))} "
+          f"in {t_roi * 1e3:.1f} ms")
+
+
+def serve_llm(args):
+    from repro.models.config import reduced_for_smoke
+    from repro.models.inputs import dummy_batch
+    from repro.models.model import decode_step, init_params, prefill
+    from repro.models.registry import get_arch
 
     spec = get_arch(args.arch)
     if "decode_32k" in spec.skip_shapes:
@@ -64,6 +131,37 @@ def main():
           f"decoded {total} tokens in {t_dec:.2f}s "
           f"({total / t_dec:.1f} tok/s)")
     print("sample:", [int(t[0]) for t in outs][:12])
+
+
+def main():
+    from repro.models.registry import ARCHITECTURES
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCHITECTURES,
+                    help="LLM mode: architecture to serve")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=48)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--kv-quant", action="store_true",
+                    help="int8 KV cache (paper-technique quantization)")
+    ap.add_argument("--compress-service", action="store_true",
+                    help="serve batched LOPC compression requests instead "
+                         "of an LLM")
+    ap.add_argument("--eb", type=float, default=1e-2,
+                    help="compression service: NOA error bound")
+    ap.add_argument("--tile", default=None,
+                    help="compression service: fixed tile shape t0,t1,t2 "
+                         "(default: auto per request)")
+    ap.add_argument("--batch-tiles", type=int, default=8)
+    args = ap.parse_args()
+
+    if args.compress_service:
+        serve_compression(args)
+        return
+    if not args.arch:
+        raise SystemExit("--arch is required unless --compress-service is set")
+    serve_llm(args)
 
 
 if __name__ == "__main__":

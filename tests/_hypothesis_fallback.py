@@ -1,0 +1,236 @@
+"""Deterministic stand-in for `hypothesis` when it is not installed.
+
+The tier-1 suite property-tests the quantizer/codec invariants with
+hypothesis; that package is not available in the offline container.  This
+shim reproduces the small API surface the tests use (``given``,
+``settings``, ``assume``, ``HealthCheck``, ``strategies.{floats,
+integers, lists, binary, booleans, sampled_from}``) with *deterministic*
+example-based generation: each test draws from an RNG seeded by the
+test's qualified name, and every strategy mixes boundary values (min,
+max, zero) with random draws.  It is intentionally weaker than real
+hypothesis (no shrinking, no database) — install `hypothesis` to get the
+full property-based run; the suite uses it automatically when present.
+
+``install()`` registers the shim under ``sys.modules['hypothesis']`` so
+the test modules' plain ``from hypothesis import ...`` imports work
+unchanged.
+"""
+from __future__ import annotations
+
+import inspect
+import sys
+import types
+import zlib
+
+import numpy as np
+
+
+class _Unsatisfied(Exception):
+    """Raised by assume(False): skip this example, draw another."""
+
+
+def assume(condition):
+    if not condition:
+        raise _Unsatisfied
+    return True
+
+
+class HealthCheck:
+    too_slow = "too_slow"
+    data_too_large = "data_too_large"
+    filter_too_much = "filter_too_much"
+    function_scoped_fixture = "function_scoped_fixture"
+
+
+class settings:
+    """Profile registry + per-test decorator (subset of hypothesis')."""
+
+    _profiles: dict = {}
+    _current: dict = {"max_examples": 20}
+
+    def __init__(self, **kw):
+        self.kw = kw
+
+    def __call__(self, fn):
+        # Works whether applied above or below @given: the attribute is
+        # read at call time from the outermost wrapper or the inner fn.
+        fn._shim_settings = self.kw
+        return fn
+
+    @classmethod
+    def register_profile(cls, name, **kw):
+        cls._profiles[name] = kw
+
+    @classmethod
+    def load_profile(cls, name):
+        cls._current = {**cls._current, **cls._profiles.get(name, {})}
+
+
+# ------------------------------------------------------------- strategies
+
+class _Strategy:
+    def draw(self, rng):  # pragma: no cover - interface
+        raise NotImplementedError
+
+
+class _Floats(_Strategy):
+    def __init__(self, min_value=None, max_value=None, allow_nan=None,
+                 allow_infinity=None, width=64, **_):
+        self.lo = -1e9 if min_value is None else float(min_value)
+        self.hi = 1e9 if max_value is None else float(max_value)
+        self.width = width
+
+    def _cast(self, v):
+        if self.width == 32:
+            v = float(np.float32(v))
+        return float(min(max(v, self.lo), self.hi))
+
+    def draw(self, rng):
+        r = rng.random()
+        if r < 0.08:
+            return self._cast(self.lo)
+        if r < 0.16:
+            return self._cast(self.hi)
+        if r < 0.24 and self.lo <= 0.0 <= self.hi:
+            return 0.0
+        if r < 0.5:
+            # log-uniform magnitude to exercise many scales
+            mag_hi = max(abs(self.lo), abs(self.hi), 1e-12)
+            mag = 10.0 ** rng.uniform(-9, np.log10(mag_hi))
+            v = mag if (self.lo >= 0 or (self.hi > 0 and rng.random() < 0.5)) else -mag
+            return self._cast(v)
+        return self._cast(rng.uniform(self.lo, self.hi))
+
+
+class _Integers(_Strategy):
+    def __init__(self, min_value, max_value):
+        self.lo = int(min_value)
+        self.hi = int(max_value)
+
+    def draw(self, rng):
+        r = rng.random()
+        if r < 0.1:
+            return self.lo
+        if r < 0.2:
+            return self.hi
+        if r < 0.3 and self.lo <= 0 <= self.hi:
+            return 0
+        span = self.hi - self.lo  # may exceed int64: draw via raw bytes
+        return self.lo + int.from_bytes(rng.bytes(16), "little") % (span + 1)
+
+
+class _Lists(_Strategy):
+    def __init__(self, elements, min_size=0, max_size=10, **_):
+        self.elements = elements
+        self.min_size = int(min_size)
+        self.max_size = int(max_size)
+
+    def draw(self, rng):
+        r = rng.random()
+        if r < 0.15:
+            size = self.min_size
+        elif r < 0.3:
+            size = self.max_size
+        else:
+            size = int(rng.integers(self.min_size, self.max_size + 1))
+        return [self.elements.draw(rng) for _ in range(size)]
+
+
+class _Binary(_Strategy):
+    def __init__(self, min_size=0, max_size=10):
+        self.min_size = int(min_size)
+        self.max_size = int(max_size)
+
+    def draw(self, rng):
+        size = int(rng.integers(self.min_size, self.max_size + 1))
+        return bytes(rng.bytes(size)) if size else b""
+
+
+class _Booleans(_Strategy):
+    def draw(self, rng):
+        return bool(rng.random() < 0.5)
+
+
+class _SampledFrom(_Strategy):
+    def __init__(self, options):
+        self.options = list(options)
+
+    def draw(self, rng):
+        return self.options[int(rng.integers(0, len(self.options)))]
+
+
+def floats(min_value=None, max_value=None, **kw):
+    return _Floats(min_value, max_value, **kw)
+
+
+def integers(min_value, max_value):
+    return _Integers(min_value, max_value)
+
+
+def lists(elements, **kw):
+    return _Lists(elements, **kw)
+
+
+def binary(min_size=0, max_size=10):
+    return _Binary(min_size, max_size)
+
+
+def booleans():
+    return _Booleans()
+
+
+def sampled_from(options):
+    return _SampledFrom(options)
+
+
+# ------------------------------------------------------------------ given
+
+def given(*strats):
+    def deco(fn):
+        sig = inspect.signature(fn)
+        params = list(sig.parameters.values())
+        keep = params[: len(params) - len(strats)]  # given fills from the right
+
+        def wrapper(*args, **kwargs):
+            opts = {**settings._current,
+                    **getattr(fn, "_shim_settings", {}),
+                    **getattr(wrapper, "_shim_settings", {})}
+            n = opts.get("max_examples") or 20
+            rng = np.random.default_rng(zlib.crc32(fn.__qualname__.encode()))
+            ran = 0
+            for _ in range(n * 5):
+                if ran >= n:
+                    break
+                vals = [s.draw(rng) for s in strats]
+                try:
+                    fn(*args, *vals, **kwargs)
+                except _Unsatisfied:
+                    continue
+                ran += 1
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        wrapper.__signature__ = sig.replace(parameters=keep)
+        return wrapper
+
+    return deco
+
+
+# ---------------------------------------------------------------- install
+
+def install():
+    """Register the shim as `hypothesis` / `hypothesis.strategies`."""
+    hyp = types.ModuleType("hypothesis")
+    st_mod = types.ModuleType("hypothesis.strategies")
+    for name in ("floats", "integers", "lists", "binary", "booleans",
+                 "sampled_from"):
+        setattr(st_mod, name, globals()[name])
+    hyp.given = given
+    hyp.settings = settings
+    hyp.assume = assume
+    hyp.HealthCheck = HealthCheck
+    hyp.strategies = st_mod
+    hyp.__is_lopc_fallback__ = True
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = st_mod

@@ -7,7 +7,14 @@ from __future__ import annotations
 
 import numpy as np
 import pytest
-from hypothesis import HealthCheck, settings
+
+try:
+    from hypothesis import HealthCheck, settings
+except ModuleNotFoundError:  # offline container: deterministic fallback
+    from _hypothesis_fallback import install
+
+    install()
+    from hypothesis import HealthCheck, settings
 
 settings.register_profile(
     "repro",

@@ -1,0 +1,168 @@
+"""v2 container robustness: NaN/Inf sidecar round-trips, and clean
+ValueErrors (never garbage decodes) on truncated streams, crc
+mismatches, and unknown section tags."""
+from __future__ import annotations
+
+from unittest import mock
+
+import numpy as np
+import pytest
+
+from repro import engine
+from repro.core import bitstream, compress, decompress
+
+
+def _field(rng, nonfinite=False):
+    x = rng.standard_normal((14, 12, 10))
+    if nonfinite:
+        x[rng.random(x.shape) < 0.08] = np.nan
+        x[0, 0, :3] = [np.inf, -np.inf, np.nan]
+    return x
+
+
+def test_nonfinite_roundtrip_v2(rng):
+    x = _field(rng, nonfinite=True)
+    y = decompress(compress(x, 1e-2, "noa"))
+    mask = ~np.isfinite(x)
+    assert np.array_equal(np.isnan(x), np.isnan(y))
+    assert np.array_equal(x[mask & ~np.isnan(x)], y[mask & ~np.isnan(x)])
+    bound = 1e-2 * (x[~mask].max() - x[~mask].min())
+    assert np.abs(x[~mask] - y[~mask]).max() <= bound
+    # all-nonfinite field: sidecar carries everything
+    z = np.full((8, 8), np.nan)
+    z[0, 0] = np.inf
+    back = decompress(compress(z, 1e-2, "noa"))
+    assert np.array_equal(np.isnan(z), np.isnan(back))
+    assert back[0, 0] == np.inf
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.float64])
+def test_nonfinite_payloads_bit_exact(rng, dtype):
+    x = _field(rng).astype(dtype)
+    # exotic payloads must survive bit-for-bit (negative zero NaN etc.)
+    x[1, 1, 1] = np.frombuffer(
+        (b"\x01\x00\xc0\x7f" if dtype == np.float32
+         else b"\x01\x00\x00\x00\x00\x00\xf8\x7f"), dtype)[0]
+    y = decompress(compress(x, 1e-2, "noa"))
+    assert x[1, 1, 1].tobytes() == y[1, 1, 1].tobytes()
+
+
+def test_truncated_stream_raises(rng):
+    blob = compress(_field(rng), 1e-2, "noa")
+    # cut everywhere across the structure: header, index, and data area
+    cuts = sorted({3, 4, 8, 30, 60, len(blob) // 2, len(blob) - 7, len(blob) - 1})
+    for cut in cuts:
+        trunc = blob[:cut]
+        with pytest.raises(ValueError):
+            decompress(trunc)
+
+
+def test_data_crc_mismatch_raises(rng):
+    blob = compress(_field(rng), 1e-2, "noa")
+    c = bitstream.read_container_v2(blob)
+    bad = bytearray(blob)
+    bad[c.data_off + 5] ^= 0xFF  # inside some tile payload
+    with pytest.raises(ValueError, match="crc"):
+        decompress(bytes(bad))
+
+
+def test_index_crc_mismatch_raises(rng):
+    blob = compress(_field(rng), 1e-2, "noa")
+    bad = bytearray(blob)
+    bad[40] ^= 0xFF  # inside the header/index region
+    with pytest.raises(ValueError):
+        decompress(bytes(bad))
+
+
+def test_unknown_section_tag_raises():
+    h = bitstream.Header(np.dtype(np.float64), (4,), "abs", 0.1, 0.1)
+    bogus = 9
+    with pytest.raises(ValueError, match="unknown v2 section tag"):
+        bitstream.write_container_v2(h, (1, 1, 4), (1, 1, 1),
+                                     [(b"x", b"")], {bogus: b"payload"})
+    # a blob written by a future/foreign writer with an unknown tag must
+    # be rejected on read, not silently mis-decoded
+    with mock.patch.object(bitstream, "V2_KNOWN_TAGS",
+                           frozenset({bitstream.TAG_NONFINITE, bogus})):
+        blob = bitstream.write_container_v2(h, (1, 1, 4), (1, 1, 1),
+                                            [(b"x", b"")], {bogus: b"payload"})
+    with pytest.raises(ValueError, match="unknown v2 section tag"):
+        bitstream.read_container_v2(blob)
+
+
+def test_unknown_dtype_code_raises(rng):
+    import struct
+    import zlib
+
+    blob = compress(_field(rng), 1e-2, "noa")
+    c = bitstream.read_container_v2(blob)
+    bad = bytearray(blob)
+    bad[6] = 7  # dtype code byte; refresh the index crc so only the
+    head_end = c.data_off - 4  # semantic check can reject it
+    bad[head_end : c.data_off] = struct.pack(
+        "<I", zlib.crc32(bytes(bad[:head_end])) & 0xFFFFFFFF
+    )
+    with pytest.raises(ValueError, match="dtype code"):
+        bitstream.read_container_v2(bytes(bad))
+
+
+def test_not_a_container():
+    with pytest.raises(ValueError, match="not an LOPC container"):
+        decompress(b"JUNKJUNKJUNKJUNK")
+    with pytest.raises(ValueError, match="not an LOPC container"):
+        bitstream.container_version(b"XY")
+
+
+def test_version_dispatch_and_cross_reads(rng):
+    x = _field(rng)
+    v1 = compress(x, 1e-2, "noa", container_version=1)
+    v2 = compress(x, 1e-2, "noa")
+    assert bitstream.container_version(v1) == 1
+    assert bitstream.container_version(v2) == 2
+    # the version-specific readers refuse the other format cleanly
+    with pytest.raises(ValueError, match="unsupported container version"):
+        bitstream.read_container(v2)
+    with pytest.raises(ValueError, match="unsupported container version"):
+        bitstream.read_container_v2(v1)
+
+
+def test_grid_shape_mismatch_raises(rng):
+    x = rng.standard_normal((10, 10))
+    blob = bytearray(compress(x, 1e-2, "noa"))
+    # grid starts after magic(4)+BBBB(4)+shape(2*8)+mode(1)+eb/eps(16)
+    # +tile_shape(24); corrupt it and refresh the index crc so only the
+    # semantic check can catch the inconsistency
+    c = bitstream.read_container_v2(bytes(blob))
+    import struct
+    import zlib
+
+    grid_off = 4 + 4 + 8 * len(c.header.shape) + 1 + 16 + 24
+    struct.pack_into("<Q", blob, grid_off, 999)
+    head_end = c.data_off - 4
+    blob[head_end : c.data_off] = struct.pack(
+        "<I", zlib.crc32(bytes(blob[:head_end])) & 0xFFFFFFFF
+    )
+    with pytest.raises(ValueError, match="corrupt"):
+        engine.decompress(bytes(blob))
+
+
+def test_roi_after_partial_corruption(rng):
+    """Per-tile crc: corrupting one tile must not poison ROI reads of
+    *other* tiles — the point of the indexed section table."""
+    x = rng.standard_normal((24, 24, 24))
+    plan = engine.CompressionPlan(tile_shape=(8, 8, 8))
+    blob = engine.compress(x, 1e-2, plan=plan)
+    full = engine.decompress(blob, plan=plan)
+    c = bitstream.read_container_v2(blob)
+    # corrupt the LAST tile's payload
+    last = c.entries[-1]
+    bad = bytearray(blob)
+    bad[c.data_off + last.bins_off + 3] ^= 0xFF
+    bad = bytes(bad)
+    # a region inside tile 0 still decodes
+    roi = engine.decompress_roi(bad, (slice(0, 8), slice(0, 8), slice(0, 8)),
+                                plan=plan)
+    assert np.array_equal(roi, full[:8, :8, :8])
+    # touching the corrupt tile raises
+    with pytest.raises(ValueError, match="crc"):
+        engine.decompress_roi(bad, (slice(16, 24),) * 3, plan=plan)

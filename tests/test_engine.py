@@ -1,0 +1,195 @@
+"""Plan/execute engine acceptance (the tentpole contract):
+
+1. Bit-identical decompressed output to the legacy whole-field path on
+   all four synthetic generators, f32 and f64.
+2. Constant jit trace count across >= 8 distinct field shapes through
+   one CompressionPlan tile size (the shape-stability point of the
+   plan/execute split).
+3. v1 blobs (seed format) still decode through the public API.
+4. Batched mixed-shape/mixed-dtype compress_many, per-field bounds.
+5. Region-of-interest decode == the matching crop of the full decode.
+6. Sharded tile placement produces byte-identical blobs.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+import pytest
+
+from repro import engine
+from repro.core import compress, decompress
+from repro.data.fields import FIELD_GENERATORS, make_scientific_field
+from repro.engine import device
+from repro.engine.plan import CompressionPlan, tiles_for_region
+
+GENERATORS = sorted(FIELD_GENERATORS)
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.float64])
+@pytest.mark.parametrize("name", GENERATORS)
+def test_engine_bit_identical_to_legacy(name, dtype):
+    x = make_scientific_field(name, (14, 13, 11), dtype, seed=7)
+    y_legacy = decompress(compress(x, 1e-2, "noa", container_version=1))
+    y_engine = decompress(compress(x, 1e-2, "noa"))
+    assert y_engine.dtype == x.dtype and y_engine.shape == x.shape
+    assert np.array_equal(y_engine, y_legacy), (name, dtype)
+
+
+@pytest.mark.parametrize("shape", [(300,), (41, 23), (9, 8, 7)])
+def test_engine_bit_identical_low_rank(rng, shape):
+    x = rng.standard_normal(shape)
+    y_legacy = decompress(compress(x, 1e-3, "noa", container_version=1))
+    y_engine = decompress(compress(x, 1e-3, "noa"))
+    assert np.array_equal(y_engine, y_legacy)
+
+
+def test_trace_count_constant_across_shapes(rng):
+    """>= 8 distinct field shapes through one plan tile size must not
+    add a single jit trace after the first field warms the programs."""
+    plan = CompressionPlan(tile_shape=(8, 8, 16), batch_tiles=4)
+    shapes = [(9, 9, 9), (20, 17, 14), (8, 8, 16), (5, 30, 7),
+              (16, 16, 16), (3, 4, 50), (11, 23, 6), (7, 7, 31)]
+    x0 = rng.standard_normal(shapes[0])
+    blob = engine.compress(x0, 1e-2, plan=plan)
+    engine.decompress(blob, plan=plan)
+    snapshot = dict(device.TRACE_COUNTS)
+    for shape in shapes[1:]:
+        x = rng.standard_normal(shape)
+        y = engine.decompress(engine.compress(x, 1e-2, plan=plan), plan=plan)
+        assert np.abs(x - y).max() <= 1e-2 * (x.max() - x.min())
+    assert dict(device.TRACE_COUNTS) == snapshot, "engine retraced on a new field shape"
+
+
+def test_v1_blobs_still_decode(rng):
+    x = rng.standard_normal((13, 12, 11))
+    v1 = compress(x, 1e-2, "noa", container_version=1)
+    v2 = compress(x, 1e-2, "noa")
+    assert v1[4] == 1 and v2[4] == 2  # version bytes
+    assert np.array_equal(decompress(v1), decompress(v2))
+
+
+def test_compress_many_mixed_requests(rng):
+    fields = [
+        rng.standard_normal((18, 14, 10)),
+        rng.standard_normal((7, 40)).astype(np.float32),
+        rng.standard_normal(500),
+        make_scientific_field("waves", (12, 12, 12), np.float32, seed=1),
+    ]
+    ebs = [1e-2, 1e-3, 5e-3, 1e-2]
+    blobs, stats = engine.compress_many(fields, ebs, return_stats=True)
+    outs = engine.decompress_many(blobs)
+    for x, eb, y, s, blob in zip(fields, ebs, outs, stats, blobs):
+        ref = decompress(compress(x, eb, "noa", container_version=1))
+        assert np.array_equal(y, ref)
+        assert s.ratio > 1.0
+        assert s.raw_bytes == x.nbytes and s.total_bytes == len(blob)
+
+
+def test_compress_many_deterministic(rng):
+    fields = [rng.standard_normal((11, 9, 8)), rng.standard_normal((30, 5))]
+    a = engine.compress_many(fields, 1e-2)
+    b = engine.compress_many(fields, 1e-2)
+    assert a == b
+    # batching must not change bytes: one-at-a-time == coalesced
+    singles = [engine.compress(x, 1e-2) for x in fields]
+    assert a == singles
+
+
+def test_roi_decode_matches_full(rng):
+    x = rng.standard_normal((33, 21, 17))
+    blob = engine.compress(x, 1e-2)
+    full = engine.decompress(blob)
+    region = (slice(5, 29), slice(0, 9), slice(12, 17))
+    roi = engine.decompress_roi(blob, region)
+    assert np.array_equal(roi, full[region])
+    # 2D and 1D fields
+    x2 = rng.standard_normal((26, 44))
+    b2 = engine.compress(x2, 1e-2)
+    assert np.array_equal(
+        engine.decompress_roi(b2, (slice(3, 19), slice(40, 44))),
+        engine.decompress(b2)[3:19, 40:44],
+    )
+    x1 = rng.standard_normal(700)
+    b1 = engine.compress(x1, 1e-2)
+    assert np.array_equal(
+        engine.decompress_roi(b1, (slice(100, 600),)),
+        engine.decompress(b1)[100:600],
+    )
+
+
+def test_roi_decode_nonfinite(rng):
+    x = rng.standard_normal((20, 15, 10))
+    x[rng.random(x.shape) < 0.05] = np.nan
+    x[3, 3, 3] = np.inf
+    blob = engine.compress(x, 1e-2)
+    full = engine.decompress(blob)
+    region = (slice(0, 8), slice(2, 15), slice(3, 9))
+    roi = engine.decompress_roi(blob, region)
+    assert np.array_equal(roi, full[region], equal_nan=True)
+
+
+def test_roi_empty_or_reversed_region(rng):
+    x = rng.standard_normal((12, 10, 8))
+    blob = engine.compress(x, 1e-2)
+    assert engine.decompress_roi(blob, (slice(5, 2), slice(0, 5), slice(0, 5))).shape == (0, 5, 5)
+    assert engine.decompress_roi(blob, (slice(3, 3), slice(0, 2), slice(0, 8))).size == 0
+
+
+def test_per_field_sweep_stats(rng):
+    """n_sweeps stays a per-field diagnostic under batching: an easy
+    field must not inherit a hard batch-mate's solver cost."""
+    plan = CompressionPlan(tile_shape=(8, 8, 8))
+    easy = rng.standard_normal((9, 9, 9))
+    hard = -np.cumsum(np.full((24, 4, 4), 1e-9), axis=0)  # long subbin chain
+    _, s_easy = engine.compress(easy, 1e-3, plan=plan, return_stats=True)
+    _, s_hard = engine.compress(hard, 1.0, plan=plan, return_stats=True)
+    _, batched = engine.compress_many([easy, hard], [1e-3, 1.0], plan=plan,
+                                      return_stats=True)
+    assert s_hard.n_sweeps > s_easy.n_sweeps
+    assert [s.n_sweeps for s in batched] == [s_easy.n_sweeps, s_hard.n_sweeps]
+
+
+def test_tiles_for_region_unit():
+    plan = CompressionPlan(tile_shape=(4, 4, 4))
+    layout = plan.layout_for((10, 10, 10))
+    assert layout.grid == (3, 3, 3)
+    assert tiles_for_region(layout, (slice(0, 4), slice(0, 4), slice(0, 4))) == [0]
+    assert tiles_for_region(layout, (slice(4, 5), slice(4, 5), slice(4, 5))) == [13]
+    assert len(tiles_for_region(layout, (slice(0, 10),) * 3)) == 27
+    assert tiles_for_region(layout, (slice(3, 3),) * 3) == []
+
+
+def test_sharded_put_is_byte_identical(rng):
+    from repro.distributed.compression import compress_fields_sharded
+
+    mesh = jax.make_mesh((jax.device_count(),), ("data",))
+    fields = [rng.standard_normal((15, 12, 9)), rng.standard_normal((8, 50))]
+    plain = engine.compress_many(fields, 1e-2)
+    sharded = compress_fields_sharded(fields, 1e-2, mesh)
+    assert plain == sharded
+
+
+def test_engine_validation_errors():
+    with pytest.raises(ValueError, match="float32/float64"):
+        engine.compress(np.zeros((4, 4), np.int32), 0.1)
+    with pytest.raises(ValueError, match="positive"):
+        engine.compress(np.zeros((4, 4)), -1.0)
+    with pytest.raises(ValueError, match="1D/2D/3D"):
+        engine.compress(np.zeros((2, 2, 2, 2)), 0.1)
+    with pytest.raises(ValueError, match="solver"):
+        engine.compress(np.zeros((4, 4)), 0.1, solver="nope")
+    with pytest.raises(ValueError, match="batch_tiles"):
+        CompressionPlan(batch_tiles=0)
+    with pytest.raises(ValueError, match="tile_shape"):
+        CompressionPlan(tile_shape=(0, 4, 4))
+    with pytest.raises(ValueError, match="one bound per field"):
+        engine.compress_many([np.zeros(8), np.zeros(8)], [0.1])
+
+
+def test_order_preservation_through_engine(rng):
+    from repro.tda import critical_point_errors, local_order_violations
+
+    x = np.asarray(make_scientific_field("gaussians", (16, 14, 12), seed=2))
+    y = engine.decompress(engine.compress(x, 1e-2))
+    assert critical_point_errors(x, y) == (0, 0, 0)
+    assert local_order_violations(x, y) == 0

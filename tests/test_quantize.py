@@ -13,6 +13,7 @@ from repro.core.quantize import (
     decode_base,
     dequantize,
     effective_eps,
+    max_abs_bin,
     quantize,
 )
 
@@ -50,7 +51,9 @@ def test_f32_bound_and_containment(vals, eb):
 )
 def test_f64_bound_and_containment(vals, eb):
     x = np.array(vals, np.float64)
-    assume(np.abs(x).max() / effective_eps(eb) < np.iinfo(np.int64).max * 0.5)
+    # public-API contract: bins must stay in the f64-exact domain
+    # (compress() rejects anything beyond via check_bin_range)
+    assume(np.abs(x).max() / effective_eps(eb) < max_abs_bin(np.float64))
     b = quantize(jnp.asarray(x), eb)
     y = dequantize(b, jnp.zeros_like(b), eb, jnp.float64)
     assert np.all(np.abs(x - np.asarray(y)) <= eb)
