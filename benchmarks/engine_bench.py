@@ -1,9 +1,18 @@
 """Engine vs legacy throughput: the perf trajectory tracker.
 
 Compares the legacy per-field path (v1 container, one jit trace per
-field shape) against the tiled engine (v2, shape-stable batched
-programs) on the paper-input stand-ins, and writes ``BENCH_engine.json``
-so successive PRs can track compress/decompress MB/s.
+field shape, int64 streams) against the device-resident engine (v2,
+shape-stable resident programs, adaptive stream widths) on the
+paper-input stand-ins, and writes ``BENCH_engine.json`` so successive
+PRs can track compress/decompress MB/s.
+
+Both paths are measured the same way: ``cold`` is the first call in
+this process (trace + compile + run — what a one-shot script pays),
+``warm`` the best of ``REPEATS`` steady-state calls (what a serving
+process pays; best-of-N is the standard low-noise estimator).  The
+engine rows also record the executor's transfer counters — one tile
+upload and one stream download per compress group is the resident
+architecture's contract, asserted in tests and made visible here.
 
   PYTHONPATH=src python -m benchmarks.run --only engine
 """
@@ -11,6 +20,7 @@ from __future__ import annotations
 
 import json
 import platform
+import time
 from pathlib import Path
 
 import jax
@@ -19,25 +29,69 @@ import numpy as np
 from repro import engine
 from repro.core import compress, decompress
 
-from .common import emit, timed
+from .common import emit
 
 OUT_PATH = Path(__file__).resolve().parent / "results" / "BENCH_engine.json"
 
-# One shared production plan: every field below reuses the same traces.
+# One shared production plan: every field below reuses the same traces
+# (per (tile, capacity, dtype) bucket — adaptive tile shrink keeps pad
+# cells, and therefore device work, near the field's own size).
 PLAN = engine.CompressionPlan(tile_shape=(16, 16, 64), batch_tiles=8)
 EB = 1e-2
+REPEATS = 5
 
 
-def _bench_legacy(x: np.ndarray):
-    blob, t_c = timed(compress, x, EB, "noa", container_version=1)
-    _, t_d = timed(decompress, blob)
-    return blob, t_c, t_d
+def _cold_warm(fn):
+    """-> (result, cold seconds, warm seconds)."""
+    t0 = time.perf_counter()
+    out = fn()
+    cold = time.perf_counter() - t0
+    warm = []
+    for _ in range(REPEATS):
+        t0 = time.perf_counter()
+        out = fn()
+        warm.append(time.perf_counter() - t0)
+    return out, cold, min(warm)
 
 
-def _bench_engine(x: np.ndarray):
-    blob, t_c = timed(engine.compress, x, EB, plan=PLAN)
-    _, t_d = timed(engine.decompress, blob, plan=PLAN)
-    return blob, t_c, t_d
+def _timed(fn):
+    t0 = time.perf_counter()
+    out = fn()
+    return out, time.perf_counter() - t0
+
+
+def _bench_both(x, paths):
+    """Interleaved cold+warm measurement of both paths.
+
+    Alternating engine/legacy calls inside the repeat loop makes a
+    transient slowdown (shared-machine throttling) hit both sides
+    instead of biasing whichever ran second; best-of-N then compares
+    like with like.
+    """
+    mb = x.nbytes / 1e6
+    blobs, stats = {}, {}
+    for name, (comp, _) in paths.items():  # cold = first call per path
+        blob, cold = _timed(lambda: comp(x))
+        blobs[name] = blob
+        stats[name] = {"c": [], "d": [], "c_cold": cold}
+    for name, (_, decomp) in paths.items():
+        _, stats[name]["d_cold"] = _timed(lambda: decomp(blobs[name]))
+    for _ in range(REPEATS):
+        for name, (comp, decomp) in paths.items():
+            _, t = _timed(lambda: comp(x))
+            stats[name]["c"].append(t)
+            _, t = _timed(lambda: decomp(blobs[name]))
+            stats[name]["d"].append(t)
+    return {
+        name: {
+            "compress_mbps": mb / min(s["c"]),
+            "decompress_mbps": mb / min(s["d"]),
+            "compress_mbps_cold": mb / s["c_cold"],
+            "decompress_mbps_cold": mb / s["d_cold"],
+            "ratio": x.nbytes / len(blobs[name]),
+        }
+        for name, s in stats.items()
+    }
 
 
 def run(inputs: dict[str, np.ndarray]) -> dict:
@@ -47,6 +101,7 @@ def run(inputs: dict[str, np.ndarray]) -> dict:
         "mode": "noa",
         "tile_shape": list(PLAN.tile_shape),
         "batch_tiles": PLAN.batch_tiles,
+        "repeats": REPEATS,
         "backend": jax.default_backend(),
         "platform": platform.platform(),
         "fields": {},
@@ -55,38 +110,74 @@ def run(inputs: dict[str, np.ndarray]) -> dict:
     for name in names:
         x = inputs[name]
         mb = x.nbytes / 1e6
-        lb, lc, ld = _bench_legacy(x)
-        eb_blob, ec, ed = _bench_engine(x)
+        engine.executor.reset_transfer_counts()
+        both = _bench_both(x, {
+            "legacy": (lambda x: compress(x, EB, "noa", container_version=1),
+                       decompress),
+            "engine": (lambda x: engine.compress(x, EB, plan=PLAN),
+                       lambda b: engine.decompress(b, plan=PLAN)),
+        })
+        legacy, eng = both["legacy"], both["engine"]
+        transfers = dict(engine.executor.TRANSFER_COUNTS)
+        calls = 1 + REPEATS  # engine compress invocations above
         entry = {
             "shape": list(x.shape),
             "dtype": str(x.dtype),
             "mb": mb,
-            "legacy": {"compress_mbps": mb / lc, "decompress_mbps": mb / ld,
-                       "ratio": x.nbytes / len(lb)},
-            "engine": {"compress_mbps": mb / ec, "decompress_mbps": mb / ed,
-                       "ratio": x.nbytes / len(eb_blob)},
+            "tile": list(PLAN.layout_for(x.shape).tile),
+            "legacy": legacy,
+            "engine": eng,
+            # engine-vs-legacy deltas (>= 1 means the engine wins)
+            "speedup": {
+                "compress": eng["compress_mbps"] / legacy["compress_mbps"],
+                "decompress": eng["decompress_mbps"] / legacy["decompress_mbps"],
+                "ratio": eng["ratio"] / legacy["ratio"],
+            },
+            # host<->device crossings per compress call (the resident
+            # contract: 1 tile upload + 1 stream download per group)
+            "transfers_per_compress": {
+                k: transfers.get(k, 0) / calls
+                for k in ("h2d_tiles", "h2d_aux", "d2h_aux", "d2h_sections")
+            },
         }
         report["fields"][name] = entry
-        rows.append((f"{name}_legacy_compress", lc, f"{mb / lc:.1f}MB/s"))
-        rows.append((f"{name}_engine_compress", ec, f"{mb / ec:.1f}MB/s"))
-        rows.append((f"{name}_legacy_decompress", ld, f"{mb / ld:.1f}MB/s"))
-        rows.append((f"{name}_engine_decompress", ed, f"{mb / ed:.1f}MB/s"))
+        le, en = legacy, eng
+        rows.append((f"{name}_compress", 1 / en["compress_mbps"] * mb,
+                     f"eng {en['compress_mbps']:.1f} vs leg "
+                     f"{le['compress_mbps']:.1f} MB/s "
+                     f"({entry['speedup']['compress']:.2f}x)"))
+        rows.append((f"{name}_decompress", 1 / en["decompress_mbps"] * mb,
+                     f"eng {en['decompress_mbps']:.1f} vs leg "
+                     f"{le['decompress_mbps']:.1f} MB/s "
+                     f"({entry['speedup']['decompress']:.2f}x)"))
 
-    # batched serving shape: all fields as ONE compress_many call
+    # batched serving shape: all fields as ONE compress_many call — the
+    # regime the resident executor exists for (shared buckets, one
+    # upload/download per group, constant traces under a mixed stream)
     fields = [inputs[n] for n in names]
     total_mb = sum(x.nbytes for x in fields) / 1e6
-    blobs, t_many = timed(engine.compress_many, fields, EB, plan=PLAN)
-    _, t_dmany = timed(engine.decompress_many, blobs, plan=PLAN)
+    engine.compress_many(fields, EB, plan=PLAN)  # warm the group buckets
+    engine.executor.reset_transfer_counts()
+    blobs, t_many, t_many_warm = _cold_warm(
+        lambda: engine.compress_many(fields, EB, plan=PLAN)
+    )
+    _, t_dmany, t_dmany_warm = _cold_warm(
+        lambda: engine.decompress_many(blobs, plan=PLAN)
+    )
     report["batched"] = {
         "n_fields": len(fields),
-        "compress_mbps": total_mb / t_many,
-        "decompress_mbps": total_mb / t_dmany,
+        "compress_mbps": total_mb / t_many_warm,
+        "decompress_mbps": total_mb / t_dmany_warm,
         "trace_count": engine.device.trace_count(),
+        "transfers": dict(engine.executor.TRANSFER_COUNTS),
     }
-    rows.append(("all_fields_compress_many", t_many, f"{total_mb / t_many:.1f}MB/s"))
-    rows.append(("all_fields_decompress_many", t_dmany, f"{total_mb / t_dmany:.1f}MB/s"))
+    rows.append(("all_fields_compress_many", t_many_warm,
+                 f"{total_mb / t_many_warm:.1f}MB/s"))
+    rows.append(("all_fields_decompress_many", t_dmany_warm,
+                 f"{total_mb / t_dmany_warm:.1f}MB/s"))
 
     OUT_PATH.parent.mkdir(parents=True, exist_ok=True)
     OUT_PATH.write_text(json.dumps(report, indent=1))
-    emit(rows, f"engine vs legacy throughput (eb={EB} noa) -> {OUT_PATH}")
+    emit(rows, f"engine vs legacy throughput (eb={EB} noa, warm best-of-"
+               f"{REPEATS}, cold alongside) -> {OUT_PATH}")
     return report

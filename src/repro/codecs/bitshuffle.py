@@ -14,6 +14,7 @@ tiles into VMEM.
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -29,6 +30,9 @@ def bitshuffle(words: jnp.ndarray) -> jnp.ndarray:
     w = dt.itemsize * 8
     n_chunks, length = words.shape
     assert length % w == 0, f"chunk_len {length} must be a multiple of {w}"
+    # Barrier: all W bit-plane extractions read `words`; without it XLA
+    # rematerializes whatever produced the words into every plane.
+    words = jax.lax.optimization_barrier(words)
     shifts = jnp.arange(w - 1, -1, -1, dtype=dt)  # MSB-first pack weights
     one = jnp.array(1, dt)
     planes = []
@@ -45,6 +49,7 @@ def bitunshuffle(shuffled: jnp.ndarray) -> jnp.ndarray:
     w = dt.itemsize * 8
     n_chunks, length = shuffled.shape
     assert length % w == 0
+    shuffled = jax.lax.optimization_barrier(shuffled)  # see bitshuffle
     shifts = jnp.arange(w - 1, -1, -1, dtype=dt)
     one = jnp.array(1, dt)
     words = jnp.zeros((n_chunks, length), dt)

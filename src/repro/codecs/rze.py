@@ -26,17 +26,45 @@ def rze_encode(words: jnp.ndarray):
     n_chunks, length = words.shape
     assert length % w == 0
     nz = words != 0
-    counts = jnp.sum(nz, axis=1).astype(jnp.int32)
-    # Stable compaction: position of word j among nonzeros = exclusive
-    # prefix count; scatter via argsort of (zero-flag, index) is stable.
-    order = jnp.argsort(~nz, axis=1, stable=True)  # nonzeros first, in order
-    packed = jnp.take_along_axis(words, order, axis=1)
-    packed = jnp.where(jnp.arange(length)[None, :] < counts[:, None], packed, 0)
+    cum_nz = jnp.cumsum(nz, axis=1, dtype=jnp.int32)
+    counts = cum_nz[:, -1]
+    # Stable compaction without a sort: a nonzero word's destination is
+    # its inclusive prefix count - 1; zero words scatter (as zeros) into
+    # the unique slots past the count, which leaves the tail zero.  One
+    # O(n) scatter replaces the stable argsort of every chunk.
+    cum_z = jnp.cumsum(~nz, axis=1, dtype=jnp.int32)
+    dest = jnp.where(nz, cum_nz - 1, counts[:, None] + cum_z - 1)
+    rows = jnp.arange(n_chunks, dtype=jnp.int32)[:, None]
+    packed = jnp.zeros((n_chunks, length), dt).at[rows, dest].set(
+        words, unique_indices=True
+    )
     # pack bitmap bits into words, MSB-first
     shifts = jnp.arange(w - 1, -1, -1, dtype=dt)
     grouped = nz.astype(dt).reshape(n_chunks, length // w, w)
     bitmap = jnp.sum(grouped << shifts[None, None, :], axis=-1, dtype=dt)
     return bitmap, packed, counts
+
+
+def rze_bitmap(words: jnp.ndarray):
+    """(C, L) uintW -> (bitmap_words (C, L//W) uintW, counts (C,)).
+
+    The bitmap/counts half of :func:`rze_encode` *without* the word
+    compaction: XLA lowers the compaction scatter poorly on CPU, and a
+    serializer that receives the raw words can compact them for free
+    with a numpy boolean index (``words[words != 0]`` — identical bytes,
+    identical download size).  The engine's executor uses this form;
+    :func:`rze_encode` remains the self-contained device codec.
+    """
+    dt = words.dtype
+    w = dt.itemsize * 8
+    n_chunks, length = words.shape
+    assert length % w == 0
+    nz = words != 0
+    counts = jnp.sum(nz, axis=1, dtype=jnp.int32)
+    shifts = jnp.arange(w - 1, -1, -1, dtype=dt)
+    grouped = nz.astype(dt).reshape(n_chunks, length // w, w)
+    bitmap = jnp.sum(grouped << shifts[None, None, :], axis=-1, dtype=dt)
+    return bitmap, counts
 
 
 def rze_decode(bitmap: jnp.ndarray, packed: jnp.ndarray):

@@ -144,14 +144,25 @@ def _undo_final_rze(flag: int, payload: bytes) -> bytes:
     return np_unrze_bytes(bitmap, nz, n).tobytes()
 
 
-def serialize_rze_section(bitmap: np.ndarray, packed: np.ndarray, counts: np.ndarray) -> bytes:
+def serialize_rze_section(bitmap: np.ndarray, packed: np.ndarray,
+                          counts: np.ndarray, compacted: bool = True) -> bytes:
     """Serialize device RZE output. counts are NOT stored (recomputed
-    from the bitmap popcount on decode)."""
+    from the bitmap popcount on decode).
+
+    ``compacted=False`` accepts the *raw* (uncompacted) word rows the
+    engine's executor downloads — the nonzero words are extracted here
+    with one boolean index, producing byte-identical sections without
+    the device-side compaction scatter.
+    """
     n_chunks, chunk_len = packed.shape
     word = packed.dtype.itemsize
     # variable-length nonzero words per chunk
-    mask = np.arange(chunk_len)[None, :] < np.asarray(counts)[:, None]
-    data = np.ascontiguousarray(packed)[mask]
+    packed = np.ascontiguousarray(packed)
+    if compacted:
+        mask = np.arange(chunk_len)[None, :] < np.asarray(counts)[:, None]
+    else:
+        mask = packed != 0
+    data = packed[mask]
     keepmap, kept = np_repeat_eliminate(np.ascontiguousarray(bitmap).reshape(-1))
     inner = Writer()
     inner.lp(keepmap.tobytes())
@@ -179,6 +190,8 @@ def deserialize_rze_section(buf: bytes):
     bitmap = np_repeat_restore(keepmap, kept, n_bitmap_words, dt).reshape(
         n_chunks, chunk_len // w
     )
+    if n_chunks == 0:  # fully-trimmed section (every chunk was all-zero)
+        return bitmap, np.zeros((0, chunk_len), dt)
     # counts from popcount of bitmap rows
     bits = np.unpackbits(bitmap.astype(f">u{word}").view(np.uint8).reshape(n_chunks, -1), axis=1)
     counts = bits.sum(axis=1)
@@ -352,6 +365,24 @@ class ContainerV2:
     def extra_section(self, tag: int) -> bytes:
         off, n = self.extra[tag]
         return self._slice(off, n)
+
+    def stream_words(self) -> tuple[int, int]:
+        """(bins, subbins) section word width in bytes.
+
+        Sections are self-describing (RZE header byte 8), so readers
+        learn the stored width — possibly narrowed by the writer, see
+        engine — without format versioning; 0 when there is no subbin
+        stream.  All tiles of a container share one width per stream.
+        """
+        e = self.entries[0]
+        bins_w = self._slice(e.bins_off, e.bins_len)[8]
+        sub_w = self._slice(e.sub_off, e.sub_len)[8] if e.sub_len else 0
+        # this byte is only covered by the per-tile crc, which has not
+        # been checked yet — reject garbage widths as corruption here
+        # rather than as a KeyError deep in the decode path
+        if bins_w not in (2, 4, 8) or sub_w not in (0, 2, 4, 8):
+            raise ValueError("corrupt LOPC container (bad section word size)")
+        return int(bins_w), int(sub_w)
 
 
 def read_container_v2(blob: bytes) -> ContainerV2:

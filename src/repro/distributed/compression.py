@@ -3,13 +3,15 @@ compression with error feedback.
 
 Field compression across a mesh
 -------------------------------
-The engine's tile batches are plain leading-axis arrays, so sharding
-LOPC across devices is just placing that axis over a mesh axis:
-``compress_fields_sharded`` routes ``engine.compress_many`` through a
-``put`` hook that lays every tile batch out with a NamedSharding.  Each
-device then quantizes/solves/encodes its own tiles; only the halo
-exchange (host-side, one cell deep) and the byte assembly touch the
-whole field.  Bytes are identical to the single-device path — the
+The engine's resident tile batches are plain leading-axis arrays, so
+sharding LOPC across devices is just placing that axis over a mesh
+axis: ``compress_fields_sharded`` routes ``engine.compress_many``
+through a ``put`` hook that lays every executor upload (tiles, eps,
+halo-index tables) out with a NamedSharding.  The same device-resident
+executor then runs unchanged: quantize/flags/solve/encode stay sharded
+over tiles, and the halo-exchange gather is a device-side collective
+over the resident batch — no host round-trips appear on the sharded
+path either.  Bytes are identical to the single-device path — the
 engine's programs are schedule-independent — which is what makes the
 sharded path safe to enable anywhere.
 
@@ -40,11 +42,14 @@ from .. import engine
 # ----------------------------------------------------- sharded tile path
 
 def make_tile_put(mesh, axis: str = "data"):
-    """``put`` hook for engine calls: shard the tile-batch axis.
+    """``put`` hook for the engine's executor: shard the tile-batch axis.
 
-    Batches whose leading extent does not divide the mesh axis (and
-    scalars/eps vectors) are replicated — correctness never depends on
-    placement, only throughput does.
+    Applied to every resident upload (haloed tiles, per-tile eps, halo
+    tables).  Batches whose leading extent does not divide the mesh axis
+    (and scalars/eps vectors) are replicated — correctness never depends
+    on placement, only throughput does.  Resident capacities are
+    multiples of 4 (executor.resident_capacity), so pick a plan whose
+    tile counts land on multiples of the axis size to split every batch.
     """
     n = mesh.shape[axis]
 

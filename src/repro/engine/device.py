@@ -1,16 +1,36 @@
 """Fixed-shape device programs of the execute half of the engine.
 
 Every function here is jitted over arrays whose shapes depend only on
-(batch_tiles, tile_shape, dtype) — never on a field's shape — so the
-whole engine costs a constant number of traces no matter how many
-distinct field shapes flow through it (asserted by the trace-count probe
-in tests).  All math reuses the exact elementwise op sequences of
+(resident capacity, tile_shape, dtype) — never on a field's shape — so
+the engine costs a constant number of traces no matter how many distinct
+field shapes flow through it (asserted by the trace-count probe in
+tests).  All math reuses the exact elementwise op sequences of
 core/quantize.py and core/subbin.py, which is what makes the engine
 bit-identical to the legacy whole-field path.
 
-Per-tile error bounds ride along as a (B,) f64 operand (broadcast to
-(B,1,1,1) inside), so one traced program serves tiles of *different
-fields with different bounds* in the same batch — the core of
+The centerpiece is :func:`resident_compress`: it takes the uploaded
+tile batch and runs quantize → order flags → subbin solve (tile-local
+solves + on-device halo-exchange rounds via the precomputed gather
+table from engine/halo.py) → delta/zigzag/BIT/RZE as a short chain of
+jitted stage programs whose intermediates never leave the device; the
+halo-round ``while_loop`` carries its state in place (XLA buffer reuse
+— no per-round host scatter/gather, no per-round re-upload, not even a
+per-round scalar readback).
+
+Solver backends (all converge to the same least fixed point, so the
+output bytes are identical — the paper's schedule independence, §IV-E):
+
+  jacobi     dense synchronous jnp sweeps per tile-local solve
+  frontier   accepted alias of jacobi here (the dense worklist's active
+             mask cannot fire under capped rounds — see _resident_solve;
+             core.subbin keeps the reference schedule)
+  blockwise  the Pallas band kernel, batched-tile form
+             (kernels/subbin_sweep.solve_tiles_blockwise); lowers via
+             Mosaic on TPU, runs in interpret mode elsewhere
+
+Per-tile error bounds ride along as a (C,) f64 operand (broadcast to
+(C,1,1,1) inside), so one traced program serves tiles of *different
+fields with different bounds* in the same resident batch — the core of
 ``compress_many``'s request coalescing.
 """
 from __future__ import annotations
@@ -23,7 +43,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..codecs.bitshuffle import bitshuffle, bitunshuffle
-from ..codecs.rze import rze_decode, rze_encode
+from ..codecs.rze import rze_bitmap, rze_decode
 from ..codecs.transforms import delta_decode, delta_encode, zigzag_decode, zigzag_encode
 from ..core import topology
 from ..core.floatbits import float_to_ordered, int_dtype_for, ordered_to_float
@@ -34,59 +54,177 @@ from ..core.quantize import bin_dtype_for, decode_base
 # to assert shape stability across many field shapes.
 TRACE_COUNTS: Counter = Counter()
 
+SOLVERS = ("auto", "jacobi", "frontier", "blockwise")
+
 
 def trace_count() -> int:
     return sum(TRACE_COUNTS.values())
+
+
+def resolve_solver(solver: str) -> tuple[str, bool]:
+    """-> (concrete schedule, interpret flag) for the current backend.
+
+    ``auto`` picks the Pallas blockwise kernel on TPU (native Mosaic
+    lowering) and the jnp Jacobi schedule elsewhere; an explicit
+    ``blockwise`` off-TPU runs the kernel in interpret mode, which is
+    also what the CI kernel job exercises.
+    """
+    if solver not in SOLVERS:
+        raise ValueError(f"unknown solver method {solver!r}")
+    on_tpu = jax.default_backend() == "tpu"
+    if solver == "auto":
+        solver = "blockwise" if on_tpu else "jacobi"
+    return solver, not on_tpu
 
 
 def _interior(x: jnp.ndarray) -> jnp.ndarray:
     return x[:, 1:-1, 1:-1, 1:-1]
 
 
-def _neighbor(x: jnp.ndarray, off) -> jnp.ndarray:
-    """Shifted interior view of a (B, t0+2, t1+2, t2+2) haloed batch."""
-    sl = tuple(
-        slice(1 + int(o), d - 1 + int(o)) for o, d in zip(off, x.shape[1:])
-    )
-    return x[(slice(None),) + sl]
+# The merged-3D layout
+# --------------------
+# A (C, t0+2, t1+2, t2+2) haloed tile batch is computed on as the 3-D
+# array (C*(t0+2), t1+2, t2+2): tile i owns the contiguous row span
+# [i*(t0+2), (i+1)*(t0+2)).  An interior cell's 14 Freudenthal neighbors
+# all lie within its own tile's halo span, so plain zero-fill shifts
+# (core.subbin's exact op sequence) read the right cells for every
+# interior; a shift crossing a span boundary only feeds *halo* rows,
+# whose flags are 0 — their relax update is max(cur, 0) = cur, so halos
+# self-preserve and their (garbage) neighbor reads are never consumed.
+# This matters because XLA lowers 3-D pad+slice+elementwise far better
+# than the batched 4-D interior-slice formulation (~17x on CPU), and it
+# lets the jnp schedules share core.subbin's sweep code verbatim.
+
+def _merge(x4: jnp.ndarray) -> jnp.ndarray:
+    c, h0, h1, h2 = x4.shape
+    return x4.reshape(c * h0, h1, h2)
 
 
-def _relax_batch(sub_h: jnp.ndarray, flags: jnp.ndarray):
-    """One Jacobi sweep over tile interiors, halos held fixed.
+def _split_interior(x_m: jnp.ndarray, c: int) -> jnp.ndarray:
+    h0 = x_m.shape[0] // c
+    return x_m.reshape(c, h0, *x_m.shape[1:])[:, 1:-1, 1:-1, 1:-1]
 
-    Same per-point update as core.subbin._relax_once; neighbor reads come
-    from the haloed state so cross-tile constraints are honored once the
-    halos carry neighbor-tile interiors.
+
+def _pad_halo(x4: jnp.ndarray, fill=0) -> jnp.ndarray:
+    """(C, t0, t1, t2) -> (C, t0+2, t1+2, t2+2), `fill` in the halo."""
+    return jnp.pad(x4, ((0, 0),) + ((1, 1),) * 3, constant_values=fill)
+
+
+def _local_solve_jacobi(sub_m, flags_m, c: int, max_iters: int):
+    """Tile-local Jacobi solve on the merged layout, halos fixed.
+    Returns ``(solved merged state, last_changed_sweep (C,) int32)`` —
+    the per-tile sweep index at which the tile last moved (0 if it was
+    already at its fixed point).
+
+    Tiles are independent given fixed halos, so the per-tile counter is
+    invariant to batch composition (a field's diagnostics never inherit a
+    batch-mate's solver cost).
     """
-    offs = topology.offsets(3)
-    ties = topology.tie_breaker(3)
-    cur = _interior(sub_h)
-    new = cur
-    for k, off in enumerate(offs):
-        nsub = _neighbor(sub_h, off)
-        need = topology.flags_to_bit(flags, k).astype(jnp.bool_)
-        cand = nsub + np.int32(ties[k]).astype(sub_h.dtype)
-        new = jnp.maximum(new, jnp.where(need, cand, 0))
-    return sub_h.at[:, 1:-1, 1:-1, 1:-1].set(new), new != cur
 
+    def cond(s):
+        return s[1] & (s[2] < max_iters)
 
-def _local_solve(sub_h: jnp.ndarray, flags: jnp.ndarray, max_iters):
-    """Iterate tile-local sweeps to convergence (halos fixed)."""
+    def body(s):
+        cur, _, it, last = s
+        new, ch = _relax_merged(cur, flags_m)
+        ch_t = jnp.any(ch.reshape(c, -1), axis=1)  # reuse the sweep's mask
+        it = it + 1
+        return new, jnp.any(ch_t), it, jnp.where(ch_t, it, last)
 
-    def cond(c):
-        _, changed, it = c
-        return changed & (it < max_iters)
-
-    def body(c):
-        sub, _, it = c
-        new, ch = _relax_batch(sub, flags)
-        return new, jnp.any(ch), it + 1
-
-    sub1, ch1 = _relax_batch(sub_h, flags)
-    sub, _, iters = jax.lax.while_loop(
-        cond, body, (sub1, jnp.any(ch1), jnp.int64(1))
+    first, ch = _relax_merged(sub_m, flags_m)
+    ch_t = jnp.any(ch.reshape(c, -1), axis=1)
+    final, _, _, last = jax.lax.while_loop(
+        cond, body,
+        (first, jnp.any(ch_t), jnp.int32(1),
+         jnp.where(ch_t, jnp.int32(1), jnp.int32(0))),
     )
-    return sub, iters
+    return final, last
+
+
+def _relax_merged(sub_m, flags_m):
+    """One Jacobi sweep on the merged layout (core.subbin's update)."""
+    from ..core.subbin import _relax_once
+
+    return _relax_once(sub_m, flags_m, 3)
+
+
+# How many sweeps a jnp schedule runs between halo refreshes.  The
+# gather is cheap (one take over the resident interiors), so a small cap
+# keeps total sweeps pinned near the global chain length: unbounded
+# local convergence re-propagates snaking in-tile chains after every
+# halo update (measured ~3x the sweeps of the legacy global schedule),
+# while cap 1 pays a gather per sweep.  8 amortizes the gather to noise
+# with <10% extra sweeps on the paper fields.  The Pallas blockwise
+# schedule intentionally ignores the cap: its tile lives in VMEM, where
+# iterating to full local convergence is the whole point (§IV-D).
+ROUND_SWEEP_CAP = 8
+
+
+def _resident_solve(flags, idx_m, mask_m, solver: str, interpret: bool,
+                    local_max_iters: int, max_rounds):
+    """Subbin least fixed point over a resident tile batch.
+
+    Rounds alternate (a) one gather that rebuilds every tile's haloed
+    view from the *current* interiors via the precomputed neighbor-index
+    table and (b) a tile-local solve to local convergence.  Round 1 sees
+    all-zero halos, so it reproduces a per-tile frontend solve; the
+    loop exits when a full round moves nothing, which by monotonicity is
+    exactly the global least fixed point (docs/engine.md).
+
+    Subbins are computed in int32 throughout: a chain cannot exceed the
+    field's point count, and fields are < 2^31 points (enforced by the
+    int32 halo-index table), so values are identical to an int64 solve.
+
+    Returns (interiors (C, *t) int32, local1 (C,), last_round (C,)):
+    per-tile sweeps of the first local solve, and the last round index in
+    which the tile still moved — the per-request diagnostics that replace
+    the old host-side round bookkeeping.
+    """
+    c = flags.shape[0]
+    tile = flags.shape[1:]
+    sub0 = jnp.zeros((c,) + tuple(tile), jnp.int32)
+    zeros_c = jnp.zeros((c,), jnp.int32)
+    blockwise = solver == "blockwise"
+    if not blockwise:
+        flags_m = _merge(_pad_halo(flags))
+
+    cap_iters = min(ROUND_SWEEP_CAP, local_max_iters)
+
+    def local_solve(haloed_m):
+        if blockwise:
+            from ..kernels import subbin_sweep  # lazy: pallas import
+
+            h0 = haloed_m.shape[0] // c
+            return subbin_sweep.solve_tiles_blockwise(
+                haloed_m.reshape(c, h0, *haloed_m.shape[1:]), flags,
+                interpret=interpret,
+            )
+        # "frontier" runs the jacobi schedule here: with capped sweeps
+        # per round, the dense worklist's active mask provably never
+        # suppresses an update (a cell only moves when a needed neighbor
+        # moved last sweep), so a separate mask-carrying loop would be
+        # identical work plus 14 shifted-mask ops per sweep.  The true
+        # dense-worklist reference schedule lives in core.subbin for the
+        # whole-field path.
+        solved_m, last = _local_solve_jacobi(haloed_m, flags_m, c, cap_iters)
+        return _split_interior(solved_m, c), last
+
+    def cond(s):
+        return s[1] & (s[2] <= max_rounds)
+
+    def body(s):
+        cur, _, rnd, local1, last_round = s
+        haloed_m = jnp.where(mask_m, cur.reshape(-1)[idx_m], 0)
+        new, iters = local_solve(haloed_m)
+        ch_t = jnp.any((new != cur).reshape(c, -1), axis=1)
+        local1 = jnp.where(rnd == 1, iters, local1)
+        last_round = jnp.where(ch_t, rnd.astype(jnp.int32), last_round)
+        return new, jnp.any(ch_t), rnd + 1, local1, last_round
+
+    final, _, _, local1, last_round = jax.lax.while_loop(
+        cond, body, (sub0, jnp.bool_(True), jnp.int64(1), zeros_c, zeros_c)
+    )
+    return final, local1, last_round
 
 
 def _quantize_halo(x_h: jnp.ndarray, eps_b: jnp.ndarray, dtype) -> jnp.ndarray:
@@ -101,67 +239,20 @@ def _quantize_halo(x_h: jnp.ndarray, eps_b: jnp.ndarray, dtype) -> jnp.ndarray:
     return b
 
 
-@partial(jax.jit, static_argnames=("dtype", "preserve_order", "max_iters"))
-def frontend(x_h, valid_h, eps, dtype, preserve_order: bool, max_iters: int):
-    """Fused per-tile-batch frontend: quantize -> order flags -> local
-    subbin solve.
+# ------------------------------------------------ lossless stage (shared)
 
-    x_h     (B, t0+2, t1+2, t2+2)  field values, 0 where invalid
-    valid_h (B, t0+2, t1+2, t2+2)  True on real field cells
-    eps     (B,) f64               effective eps per tile
-
-    Returns (bins_enc (B,*t), flags (B,*t) u32, sub_h (B,*t+2), sweeps).
-    Cells outside the field (pad or beyond a boundary) carry the same
-    sentinel bin / +inf value the legacy path uses for out-of-grid
-    neighbors, so interior flags equal the whole-field computation.
-    """
-    TRACE_COUNTS["frontend"] += 1
-    eps_b = eps[:, None, None, None]
-    bins_h = _quantize_halo(x_h, eps_b, dtype)
-    sentinel = jnp.iinfo(bins_h.dtype).min
-    bins_h = jnp.where(valid_h, bins_h, sentinel)
-    vals_h = jnp.where(valid_h, x_h, jnp.asarray(jnp.inf, x_h.dtype))
-
-    offs = topology.offsets(3)
-    bc = _interior(bins_h)
-    vc = _interior(vals_h)
-    flags = jnp.zeros(bc.shape, jnp.uint32)
-    for k, off in enumerate(offs):
-        nb = _neighbor(bins_h, off)
-        nv = _neighbor(vals_h, off)
-        bit = (nb == bc) & topology.sos_less(nv, vc, k, 3)
-        flags = flags | (bit.astype(jnp.uint32) << np.uint32(k))
-
-    bins_enc = jnp.where(_interior(valid_h), bc, 0)
-    sub_dt = jnp.int32 if bins_h.dtype == jnp.int32 else jnp.int64
-    sub_h = jnp.zeros(bins_h.shape, sub_dt)
-    if preserve_order:
-        sub_h, sweeps = _local_solve(sub_h, flags, jnp.int64(max_iters))
-    else:
-        sweeps = jnp.int64(0)
-    return bins_enc, flags, sub_h, sweeps
-
-
-@partial(jax.jit, static_argnames=("max_iters",))
-def relax_round(sub_h, flags, max_iters: int):
-    """One halo-exchange round: re-solve tiles locally against fresh
-    halos.  Returns (new sub_h, changed-any scalar)."""
-    TRACE_COUNTS["relax"] += 1
-    before = _interior(sub_h)
-    new, _ = _local_solve(sub_h, flags, jnp.int64(max_iters))
-    return new, jnp.any(_interior(new) != before)
-
-
-@partial(jax.jit, static_argnames=("chunk_len", "use_delta"))
-def encode_tiles(ints: jnp.ndarray, chunk_len: int, use_delta: bool):
-    """(B, E) ints -> per-chunk RZE streams, chunks grouped per tile.
+def _encode_ints(ints: jnp.ndarray, chunk_len: int, use_delta: bool):
+    """(C, E) ints -> (bitmap, raw shuffled words, counts) per chunk.
 
     Each tile occupies ceil(E/chunk_len) consecutive chunk rows, so the
     host can slice out independent per-tile sections (the v2 container's
-    unit of parallel decode).  Same stage order as codecs.pipeline:
-    [delta ->] zigzag|reinterpret -> BIT_w -> RZE_w.
+    unit of parallel decode).  Same stage order as codecs.pipeline
+    ([delta ->] zigzag|reinterpret -> BIT_w -> RZE_w), except the RZE
+    word compaction stays on the host: the serializer compacts the raw
+    words with one boolean index (identical bytes, identical download
+    size), which beats XLA's CPU scatter lowering by an order of
+    magnitude.
     """
-    TRACE_COUNTS["encode"] += 1
     b, e = ints.shape
     n_chunks = -(-e // chunk_len)
     padded = jnp.pad(ints, ((0, 0), (0, n_chunks * chunk_len - e)))
@@ -173,13 +264,12 @@ def encode_tiles(ints: jnp.ndarray, chunk_len: int, use_delta: bool):
             jnp.dtype(jnp.dtype(chunks.dtype).str.replace("i", "u"))
         )
     shuffled = bitshuffle(words)
-    return rze_encode(shuffled)
+    bitmap, counts = rze_bitmap(shuffled)
+    return bitmap, shuffled, counts
 
 
-@partial(jax.jit, static_argnames=("tile_elems", "use_delta", "out_dtype"))
-def decode_tiles(bitmap, packed, tile_elems: int, use_delta: bool, out_dtype):
-    """Inverse of encode_tiles -> (B, tile_elems) ints."""
-    TRACE_COUNTS["decode"] += 1
+def _decode_ints(bitmap, packed, tile_elems: int, use_delta: bool, out_dtype):
+    """Inverse of _encode_ints -> (C, tile_elems) ints."""
     shuffled = rze_decode(bitmap, packed)
     words = bitunshuffle(shuffled)
     if use_delta:
@@ -192,11 +282,159 @@ def decode_tiles(bitmap, packed, tile_elems: int, use_delta: bool, out_dtype):
     return chunks.astype(out_dtype).reshape(b, n_chunks * chunk_len)[:, :tile_elems]
 
 
+# --------------------------------------------- resident stage programs
+#
+# The resident pipeline is a handful of jitted stage programs rather
+# than one mega-jit: every intermediate stays a device array between
+# calls (still exactly one tile upload and one stream download per
+# group), but XLA compiles each stage in isolation — its fusion
+# heuristics generate ~3x slower code when quantize, the solve loop, and
+# the 32/64-plane bitshuffle land in a single computation.  Splitting
+# also shares traces harder: the encode program is keyed only by the
+# chunk-row count, so compress groups with different tile shapes but
+# equal row counts reuse it.
+
+@partial(jax.jit, static_argnames=("dtype", "preserve_order"))
+def _resident_quantize(x_h, eps, dtype, preserve_order: bool):
+    """Quantize one resident tile batch; NaN in x_h marks cells outside
+    the field (tile pad, halo border, pad tiles), so validity travels
+    *inside* the one tile upload instead of as a second array."""
+    TRACE_COUNTS["resident_quantize"] += 1
+    valid_h = jnp.isfinite(x_h)
+    x0 = jnp.where(valid_h, x_h, jnp.asarray(0, x_h.dtype))
+    eps_b = eps[:, None, None, None]
+    bins_h = _quantize_halo(x0, eps_b, dtype)
+    sentinel = jnp.iinfo(bins_h.dtype).min
+    bins_h = jnp.where(valid_h, bins_h, sentinel)
+    bins_enc = jnp.where(_interior(valid_h), _interior(bins_h), 0)
+    if not preserve_order:
+        return bins_enc, None, None
+    vals_m = _merge(jnp.where(valid_h, x0, jnp.asarray(jnp.inf, x0.dtype)))
+    return bins_enc, _merge(bins_h), vals_m
+
+
+@jax.jit
+def _resident_flags(bins_m, vals_m):
+    """Order flags on the merged layout: interior cells only see their
+    own tile's halo span and halo-row results are sliced away, so the
+    flags equal the whole-field computation (sentinel bins / +inf values
+    at invalid cells kill every out-of-field constraint).
+
+    A separate jit from quantize on purpose: fused, XLA rematerializes
+    the quantize chain into every one of the 14 offset terms (~10x
+    slower on CPU, and optimization_barrier does not stop it).
+    """
+    TRACE_COUNTS["resident_flags"] += 1
+    return topology.order_flags(bins_m, vals_m)
+
+
+def resident_frontend(x_h, eps, dtype, preserve_order: bool):
+    """Quantize + order flags over one resident tile batch.
+
+    Returns (bins_enc (C, *t), flags (C, *t) uint32 | None), both
+    device-resident.
+    """
+    capacity = x_h.shape[0]
+    bins_enc, bins_m, vals_m = _resident_quantize(x_h, eps, jnp.dtype(dtype),
+                                                  preserve_order)
+    if not preserve_order:
+        return bins_enc, None
+    flags_m = _resident_flags(bins_m, vals_m)
+    return bins_enc, _split_interior(flags_m, capacity)
+
+
+@partial(jax.jit, static_argnames=("solver", "interpret", "local_max_iters"))
+def resident_solve(flags, idx, mask, max_rounds, solver: str,
+                   interpret: bool, local_max_iters: int):
+    """Jitted wrapper of the halo-round solve (see _resident_solve).
+    ``max_rounds`` is traced, so it never forces a retrace."""
+    TRACE_COUNTS["resident_solve"] += 1
+    return _resident_solve(flags, _merge(idx), _merge(mask), solver,
+                           interpret, local_max_iters, max_rounds)
+
+
+@partial(jax.jit, static_argnames=("chunk_len", "use_delta"))
+def encode_tiles(ints, chunk_len: int, use_delta: bool):
+    """Jitted lossless stage over (C, tile_elems) resident integers."""
+    TRACE_COUNTS["encode"] += 1
+    return _encode_ints(ints, chunk_len, use_delta)
+
+
+def resident_compress(x_h, eps, idx, mask, max_rounds, dtype,
+                      preserve_order: bool, solver: str, interpret: bool,
+                      local_max_iters: int, bins_store, bins_chunk: int):
+    """Quantize -> flags -> solve -> bins encode over one resident batch.
+
+    Chains the stage programs above; every intermediate is a device
+    array, so nothing crosses the host boundary between quantize and the
+    encoded RZE streams.  ``bins_store`` is the (host-chosen, possibly
+    narrowed) section word dtype for bins.  Returns ``((bins bitmap,
+    packed, counts), sub | None, local1, last_round, sub_max | None)``
+    with the *unencoded* subbins still resident — the executor reads the
+    ``sub_max`` scalar to pick the narrowest subbin width, then runs the
+    sub encode as one more device stage.
+    """
+    capacity = x_h.shape[0]
+    bins_enc, flags = resident_frontend(x_h, eps, jnp.dtype(dtype),
+                                        preserve_order)
+    bins_streams = encode_tiles(
+        bins_enc.astype(bins_store).reshape(capacity, -1), bins_chunk, True
+    )
+    if not preserve_order:
+        zc = jnp.zeros((capacity,), jnp.int32)
+        return bins_streams, None, zc, zc, None
+    sub, local1, last_round = resident_solve(
+        flags, idx, mask, max_rounds, solver=solver, interpret=interpret,
+        local_max_iters=local_max_iters,
+    )
+    return bins_streams, sub, local1, last_round, _sub_max(sub)
+
+
+@jax.jit
+def _sub_max(sub):
+    """Largest subbin of the batch — the one scalar the executor reads
+    back mid-pipeline, to pick the narrowest subbin section width (the
+    solve must finish before the sub encode anyway, so this readback
+    rides the natural synchronization point)."""
+    TRACE_COUNTS["sub_max"] += 1
+    return jnp.max(sub)
+
+
+@partial(jax.jit, static_argnames=("tile_elems", "use_delta", "out_dtype"))
+def decode_tiles(bitmap, packed, tile_elems: int, use_delta: bool, out_dtype):
+    """Jitted inverse of encode_tiles -> (C, tile_elems) resident ints."""
+    TRACE_COUNTS["decode"] += 1
+    return _decode_ints(bitmap, packed, tile_elems, use_delta, out_dtype)
+
+
 @partial(jax.jit, static_argnames=("dtype",))
 def dequantize_tiles(bins, subbins, eps, dtype):
-    """(B, *tile) bins+subbins -> reconstructed values, per-tile eps."""
+    """(C, E) resident bins+subbins -> reconstructed values, per-tile
+    eps (mirroring the compress side's per-tile bounds)."""
     TRACE_COUNTS["dequantize"] += 1
-    eps_b = eps[:, None, None, None]
+    eps_b = eps[:, None]
     base = decode_base(bins, eps_b, dtype)
     idt = int_dtype_for(dtype)
     return ordered_to_float(float_to_ordered(base) + subbins.astype(idt), dtype)
+
+
+def _signed_twin(arr) -> jnp.dtype:
+    return jnp.dtype(jnp.dtype(arr.dtype).str.replace("u", "i"))
+
+
+def resident_decode_order(bitmap, packed, sub_bitmap, sub_packed, eps,
+                          tile_elems: int, dtype):
+    """Decode an order-preserving tile batch: RZE -> BIT -> zigzag/delta
+    -> dequantize; intermediates stay device-resident between stages.
+    Stream word widths come from the arrays themselves (the section
+    header dictated them), so narrowed and legacy widths share a path."""
+    bins = decode_tiles(bitmap, packed, tile_elems, True, _signed_twin(packed))
+    subs = decode_tiles(sub_bitmap, sub_packed, tile_elems, False,
+                        _signed_twin(sub_packed))
+    return dequantize_tiles(bins, subs, eps, jnp.dtype(dtype))
+
+
+def resident_decode_plain(bitmap, packed, eps, tile_elems: int, dtype):
+    """Decode without a subbin stream (preserve_order=False)."""
+    bins = decode_tiles(bitmap, packed, tile_elems, True, _signed_twin(packed))
+    return dequantize_tiles(bins, jnp.zeros_like(bins), eps, jnp.dtype(dtype))

@@ -6,10 +6,12 @@ into shared fixed-shape tile batches:
   plan      pad + partition each field into one canonical tile shape,
             with a one-cell halo so order constraints crossing tile
             boundaries stay visible to the subbin solver
-  execute   a fused device program per tile batch (quantize -> order
-            flags -> tile-local subbin fixed point), then halo-exchange
-            relax rounds to the *global* least fixed point, then the
-            lossless pipeline (delta/zigzag/BIT/RZE) per tile batch
+  execute   the device-resident executor (engine/executor.py): tiles are
+            uploaded once per group, then quantize -> order flags ->
+            tile-local subbin solve -> on-device halo-exchange rounds ->
+            delta/zigzag/BIT/RZE run as a chain of resident stage
+            programs whose intermediates never leave the device; one
+            download returns the encoded streams
   serialize the v2 container: an indexed per-tile section table that
             decodes embarrassingly parallel, including partial
             region-of-interest reads (``decompress_roi``)
@@ -18,12 +20,18 @@ Because the subbin solution is the least fixed point of a monotone
 system, tile-local convergence plus halo exchange lands on exactly the
 same integers as the legacy whole-field solve — the engine is
 bit-identical to ``core.lopc`` on every input (tested), it just gets
-there with shape-stable programs: one jit trace per (tile_shape, dtype)
-instead of one per field shape.
+there with shape-stable programs and without the host round-trips the
+PR-1 engine paid between every stage.
+
+``solver`` selects the subbin schedule the executor runs — ``jacobi``
+(dense jnp sweeps; ``frontier`` is an accepted alias here, see
+engine/device.py), ``blockwise`` (the Pallas band kernel, batched-tile
+form), or ``auto`` (blockwise on TPU, jacobi elsewhere).  Schedules
+differ in speed only; all of them emit byte-identical containers
+(paper §IV-E, tested).
 """
 from __future__ import annotations
 
-import jax.numpy as jnp
 import numpy as np
 
 from ..core import bitstream
@@ -35,13 +43,13 @@ from ..core.quantize import (
     effective_eps,
 )
 from . import device
+from .executor import Executor, default_executor
 from .plan import (
     HALO,
     CompressionPlan,
     TileLayout,
     canonical3d_shape,
     extract_halo_tiles,
-    gather_interiors,
     padded_with_border,
     scatter_interiors,
     tiles_for_region,
@@ -50,11 +58,9 @@ from .plan import (
 FLAG_ORDER_PRESERVING = bitstream.FLAG_ORDER_PRESERVING
 FLAG_HAS_NONFINITE = bitstream.FLAG_HAS_NONFINITE
 
-_SOLVERS = ("auto", "jacobi", "frontier", "blockwise")
+_SOLVERS = device.SOLVERS
 
 DEFAULT_PLAN = CompressionPlan()
-
-_CHUNK_WORDS = {4: 4096, 8: 2048}  # word bytes -> words per 16 KiB chunk
 
 
 # -------------------------------------------- nonfinite sidecar (ROI form)
@@ -98,12 +104,6 @@ def _check_eps(x: np.ndarray, eps_abs: float):
     check_bin_range(x, eps_abs)
 
 
-def _chunks_per_tile(layout: TileLayout, bdt) -> tuple[int, int]:
-    """-> (chunks per tile, chunk length in words)."""
-    chunk_len = _CHUNK_WORDS[np.dtype(bdt).itemsize]
-    return -(-layout.tile_elems // chunk_len), chunk_len
-
-
 # -------------------------------------------------------------- compress
 
 class _Request:
@@ -121,34 +121,52 @@ class _Request:
         self.eps_abs = abs_bound_from_mode(x, eb, mode)
         _check_eps(x, self.eps_abs)
         self.eps_eff = effective_eps(self.eps_abs)
+        # bound on |bin| (quantize = round + <=2 correction steps), known
+        # before any device work — it picks the narrowest section width
+        self.max_bin = float(np.max(np.abs(x), initial=0.0)) / self.eps_eff + 4
         self.layout = plan.layout_for(x.shape)
-        self.sub_pb = None  # padded+border global subbin state
         self.sweeps = 0
 
 
-def _batched(n, batch):
-    """Slice [start, stop) pairs covering n items in fixed-size batches."""
-    return [(i, min(i + batch, n)) for i in range(0, n, batch)]
+def _store_bin_dtype(reqs, dtype) -> np.dtype:
+    """Narrowest section word width whose bins (and their deltas) fit.
+
+    The v2 tile sections are self-describing (word size in the header),
+    so the writer is free to store bins at the width the *values* need
+    rather than the conservative quantizer dtype: an eb=1e-2 NOA field
+    has |bin| <~ 50 and fits int16 regardless of being f64 data.  Every
+    halved width halves the chunk rows and bit-planes of the dominant
+    BIT/RZE stage on both ends of the pipeline.  The bound is doubled so
+    per-chunk deltas cannot wrap (wrapping would still decode exactly —
+    two's complement cumsum inverts it — but costs ratio).
+    """
+    native = np.dtype(bin_dtype_for(dtype))
+    bound = 2 * max(r.max_bin for r in reqs) + 4
+    for cand in (np.dtype(np.int16), np.dtype(np.int32)):
+        if cand.itemsize < native.itemsize and bound < np.iinfo(cand).max:
+            return cand
+    return native
 
 
-def _pad_batch(arr: np.ndarray, batch: int, fill=0):
-    if arr.shape[0] == batch:
-        return arr
-    pad = np.full((batch - arr.shape[0],) + arr.shape[1:], fill, arr.dtype)
-    return np.concatenate([arr, pad], axis=0)
+def _serialize_tile_sections(streams, n_tiles: int, cpt: int):
+    """Split batched chunk rows into per-tile RZE sections.
 
-
-def _serialize_tile_sections(bitmap, packed, counts, n_tiles, cpt):
-    """Split batched chunk rows into per-tile RZE sections."""
-    bitmap = np.asarray(bitmap)
-    packed = np.asarray(packed)
-    counts = np.asarray(counts)
+    Trailing all-zero chunks of a tile are trimmed before serialization:
+    small fields routed through a large canonical tile would otherwise
+    pay for rows of pure pad in every tile (the PR-1 per-tile ratio
+    regression).  A zero chunk is exactly a zero count — decode
+    reconstructs missing rows as zeros, so trimming is lossless.
+    """
+    bitmap, packed, counts = (np.asarray(a) for a in streams)
     out = []
     for j in range(n_tiles):
         rows = slice(j * cpt, (j + 1) * cpt)
+        nz = np.flatnonzero(counts[rows])
+        keep = int(nz[-1]) + 1 if nz.size else 0
+        rows = slice(j * cpt, j * cpt + keep)
         out.append(
             bitstream.serialize_rze_section(
-                bitmap[rows], packed[rows], counts[rows]
+                bitmap[rows], packed[rows], counts[rows], compacted=False
             )
         )
     return out
@@ -168,25 +186,24 @@ def compress_many(
 
     ``fields`` may mix shapes, ranks, and dtypes; ``eb`` is one bound or
     a per-field sequence.  Tiles of all requests are coalesced into
-    shared fixed-shape device batches (grouped by (dtype, tile_shape)),
-    which is both the throughput path and what keeps jit traces constant
-    across arbitrary request mixes.  ``put`` optionally places each
-    device batch (e.g. a NamedSharding put from distributed.compression).
+    shared device-resident batches (grouped by (dtype, tile_shape)) —
+    both the throughput path and what keeps jit traces constant across
+    arbitrary request mixes.  ``put`` optionally places each uploaded
+    array (e.g. a NamedSharding put from distributed.compression).
 
     Returns a list of blobs, or (blobs, stats) when ``return_stats``.
     """
     if solver not in _SOLVERS:
         raise ValueError(f"unknown solver method {solver!r}")
-    # All tile-local schedules converge to the same least fixed point
-    # (the paper's schedule-independence), so every solver name maps to
-    # the engine's blockwise-local schedule and produces identical bytes.
     plan = plan or DEFAULT_PLAN
     fields = list(fields)
+    if not fields:
+        return ([], []) if return_stats else []
     ebs = list(eb) if np.ndim(eb) else [eb] * len(fields)
     if len(ebs) != len(fields):
         raise ValueError("eb must be a scalar or one bound per field")
     reqs = [_Request(x, e, mode, plan) for x, e in zip(fields, ebs)]
-    put = put or (lambda a: jnp.asarray(a))
+    ex = Executor(plan, solver, put) if put else default_executor(plan, solver)
 
     groups: dict[tuple, list[int]] = {}
     for i, r in enumerate(reqs):
@@ -194,9 +211,9 @@ def compress_many(
 
     blobs: list[bytes | None] = [None] * len(reqs)
     stats: list[CompressStats | None] = [None] * len(reqs)
-    for (dtype, tile), members in groups.items():
+    for (dtype, _tile), members in groups.items():
         _compress_group(
-            [reqs[i] for i in members], dtype, plan, preserve_order, put,
+            [reqs[i] for i in members], dtype, ex, preserve_order,
             [blobs, stats], members, return_stats,
         )
     if return_stats:
@@ -204,132 +221,48 @@ def compress_many(
     return blobs
 
 
-def _compress_group(reqs, dtype, plan, preserve_order, put, out, members,
+def _compress_group(reqs, dtype, ex: Executor, preserve_order, out, members,
                     return_stats):
+    """Plan-side assembly for one (dtype, tile_shape) group: build the
+    NaN-marked haloed tile batch, run the executor, serialize per-tile
+    sections into one v2 container per request."""
     blobs, stats = out
-    batch = plan.batch_tiles
-    bdt = bin_dtype_for(dtype)
-    sub_np = np.int32 if np.dtype(bdt) == np.int32 else np.int64
-    layout0 = reqs[0].layout
-    tile = layout0.tile
-    tile_elems = layout0.tile_elems
-    max_iters = tile_elems + 2
-    cpt, chunk_len = _chunks_per_tile(layout0, bdt)
+    nan = np.asarray(np.nan, dtype)
 
-    # ---- plan: tiles of every request, concatenated (shared batches)
-    x_tiles, valid_tiles, eps_tiles, ranges = [], [], [], []
+    # ---- plan: tiles of every request, concatenated (shared batches).
+    # NaN marks every cell outside a field (in-tile pad, halo border), so
+    # validity rides inside the single tile upload.
+    x_tiles, eps_tiles, ranges = [], [], []
     n_total = 0
     for r in reqs:
         arr3 = r.x.reshape(r.layout.canonical)
-        x_pb = padded_with_border(arr3, r.layout, arr3.dtype.type(0))
-        v_pb = padded_with_border(
-            np.ones(r.layout.canonical, bool), r.layout, False
-        )
+        x_pb = padded_with_border(arr3, r.layout, nan)
         x_tiles.append(extract_halo_tiles(x_pb, r.layout))
-        valid_tiles.append(extract_halo_tiles(v_pb, r.layout))
         eps_tiles.append(np.full(r.layout.n_tiles, r.eps_eff, np.float64))
         ranges.append((n_total, n_total + r.layout.n_tiles))
         n_total += r.layout.n_tiles
-    x_all = np.concatenate(x_tiles)
-    v_all = np.concatenate(valid_tiles)
-    eps_all = np.concatenate(eps_tiles)
 
-    # ---- execute: fused frontend per tile batch
-    bins_all = np.empty((n_total,) + tile, np.dtype(bdt))
-    flags_all = np.empty((n_total,) + tile, np.uint32)
-    sub_h_all = np.empty((n_total,) + layout0.halo_tile, sub_np)
-    for lo, hi in _batched(n_total, batch):
-        bins_b, flags_b, sub_b, sw = device.frontend(
-            put(_pad_batch(x_all[lo:hi], batch)),
-            put(_pad_batch(v_all[lo:hi], batch)),
-            put(_pad_batch(eps_all[lo:hi], batch, 1.0)),
-            jnp.dtype(dtype),
-            preserve_order,
-            max_iters,
-        )
-        n = hi - lo
-        bins_all[lo:hi] = np.asarray(bins_b)[:n]
-        flags_all[lo:hi] = np.asarray(flags_b)[:n]
-        sub_h_all[lo:hi] = np.asarray(sub_b)[:n]
-        # attribute the batch's local sweep count to every request with
-        # tiles in this batch (a shared while_loop runs to the slowest
-        # tile; per-request counts are schedule diagnostics, like the
-        # legacy path's)
-        for r, (rlo, rhi) in zip(reqs, ranges):
-            if rlo < hi and rhi > lo:
-                r.sweeps = max(r.sweeps, int(sw))
+    # ---- execute: the whole pipeline, device-resident
+    gs = ex.compress_tiles(
+        np.concatenate(x_tiles), np.concatenate(eps_tiles),
+        tuple(r.layout for r in reqs), dtype, preserve_order,
+        bins_store=_store_bin_dtype(reqs, dtype),
+    )
 
-    # ---- halo-exchange rounds to the global least fixed point
+    # ---- per-request solver diagnostics (sweeps are never serialized)
     if preserve_order:
         for r, (lo, hi) in zip(reqs, ranges):
-            r.sub_pb = padded_with_border(
-                np.zeros(r.layout.canonical, sub_np), r.layout, sub_np(0)
-            )
-            scatter_interiors(
-                sub_h_all[lo:hi][:, HALO:-HALO, HALO:-HALO, HALO:-HALO],
-                r.layout, r.sub_pb,
-            )
-        # Fields are independent (halos only couple tiles of the same
-        # field), so each converges on its own: single-tile fields are
-        # already done after the frontend, and a field whose round
-        # changes nothing is done forever (monotone iteration) — drop
-        # both from subsequent rounds instead of re-solving the world.
-        active = [(r, lo, hi) for r, (lo, hi) in zip(reqs, ranges)
-                  if r.layout.n_tiles > 1]
-        while active:
-            sub_tiles = np.concatenate(
-                [extract_halo_tiles(r.sub_pb, r.layout) for r, _, _ in active]
-            )
-            flags_act = np.concatenate([flags_all[lo:hi] for _, lo, hi in active])
-            n_act = sub_tiles.shape[0]
-            new_sub = np.empty_like(sub_tiles)
-            for lo, hi in _batched(n_act, batch):
-                out_b, _ = device.relax_round(
-                    put(_pad_batch(sub_tiles[lo:hi], batch)),
-                    put(_pad_batch(flags_act[lo:hi], batch)),
-                    max_iters,
-                )
-                new_sub[lo:hi] = np.asarray(out_b)[: hi - lo]
-            still = []
-            off = 0
-            for r, flo, fhi in active:
-                k = r.layout.n_tiles
-                seg_new = new_sub[off : off + k][:, HALO:-HALO, HALO:-HALO, HALO:-HALO]
-                seg_old = sub_tiles[off : off + k][:, HALO:-HALO, HALO:-HALO, HALO:-HALO]
-                if not np.array_equal(seg_new, seg_old):
-                    r.sweeps += 1  # this field advanced in this round
-                    scatter_interiors(seg_new, r.layout, r.sub_pb)
-                    still.append((r, flo, fhi))
-                off += k
-            active = still
-        sub_all = np.concatenate(
-            [gather_interiors(r.sub_pb, r.layout) for r in reqs]
-        ).astype(sub_np)
+            local = int(gs.local_sweeps[lo:hi].max(initial=0))
+            rounds = int(gs.last_round[lo:hi].max(initial=0))
+            r.sweeps = local + max(0, rounds - 1)
+
+    # ---- per-tile serialization, then one v2 container per request
+    bins_sections = _serialize_tile_sections(gs.bins, n_total, gs.bins_cpt)
+    if preserve_order:
+        sub_sections = _serialize_tile_sections(gs.subs, n_total, gs.subs_cpt)
     else:
-        sub_all = None
+        sub_sections = [b""] * n_total
 
-    # ---- lossless pipeline per tile batch, then per-tile serialization
-    bins_sections = [None] * n_total
-    sub_sections = [b""] * n_total
-    for lo, hi in _batched(n_total, batch):
-        bitmap, packed, counts = device.encode_tiles(
-            put(_pad_batch(bins_all[lo:hi], batch).reshape(batch, tile_elems)),
-            chunk_len, True,
-        )
-        n = hi - lo
-        bins_sections[lo:hi] = _serialize_tile_sections(
-            bitmap, packed, counts, n, cpt
-        )
-        if preserve_order:
-            bitmap, packed, counts = device.encode_tiles(
-                put(_pad_batch(sub_all[lo:hi], batch).reshape(batch, tile_elems)),
-                chunk_len, False,
-            )
-            sub_sections[lo:hi] = _serialize_tile_sections(
-                bitmap, packed, counts, n, cpt
-            )
-
-    # ---- serialize one v2 container per request
     for r, (lo, hi), i in zip(reqs, ranges, members):
         flags = FLAG_ORDER_PRESERVING if preserve_order else 0
         extra = {}
@@ -342,7 +275,7 @@ def _compress_group(reqs, dtype, plan, preserve_order, put, out, members,
         )
         tiles = list(zip(bins_sections[lo:hi], sub_sections[lo:hi]))
         blob = bitstream.write_container_v2(
-            header, tile, r.layout.grid, tiles, extra
+            header, r.layout.tile, r.layout.grid, tiles, extra
         )
         blobs[i] = blob
         if return_stats:
@@ -372,70 +305,14 @@ def compress(field, eb, mode="noa", preserve_order=True, solver="auto",
 
 # ------------------------------------------------------------ decompress
 
-def _decode_items(items, tile, dtype, order: bool, batch: int):
-    """Decode a mixed tile work-list -> values (n, *tile).
-
-    ``items`` is a list of (container, tile_id, eps_eff) sharing one
-    (tile shape, dtype, order) signature — tiles of *different blobs*
-    ride the same fixed-shape device batches, mirroring compress_many's
-    request coalescing (eps is a per-tile runtime operand).
-    """
-    dtype = np.dtype(dtype)
-    bdt = np.dtype(bin_dtype_for(dtype))
-    tile_elems = int(np.prod(tile))
-    chunk_len = _CHUNK_WORDS[bdt.itemsize]
-    cpt = -(-tile_elems // chunk_len)
-    udt = bdt.str.replace("i", "u")
-    n = len(items)
-    values = np.empty((n,) + tuple(tile), dtype)
-    zero_bitmap = np.zeros((cpt, chunk_len // (bdt.itemsize * 8)), udt)
-    zero_packed = np.zeros((cpt, chunk_len), udt)
-    for lo, hi in _batched(n, batch):
-        bmaps, packs, sub_bmaps, sub_packs = [], [], [], []
-        eps = np.ones(batch, np.float64)
-        for j, (c, t, eps_eff) in enumerate(items[lo:hi]):
-            eps[j] = eps_eff
-            bins_b, sub_b = c.tile_payloads(t)
-            bm, pk = bitstream.deserialize_rze_section(bins_b)
-            bmaps.append(bm)
-            packs.append(pk)
-            if order:
-                bm, pk = bitstream.deserialize_rze_section(sub_b)
-                sub_bmaps.append(bm)
-                sub_packs.append(pk)
-        while len(bmaps) < batch:  # pad to the fixed batch extent
-            bmaps.append(zero_bitmap)
-            packs.append(zero_packed)
-            if order:
-                sub_bmaps.append(zero_bitmap)
-                sub_packs.append(zero_packed)
-        bins = device.decode_tiles(
-            jnp.asarray(np.concatenate(bmaps)),
-            jnp.asarray(np.concatenate(packs)),
-            tile_elems, True, jnp.dtype(bdt),
-        ).reshape((batch,) + tuple(tile))
-        if order:
-            subs = device.decode_tiles(
-                jnp.asarray(np.concatenate(sub_bmaps)),
-                jnp.asarray(np.concatenate(sub_packs)),
-                tile_elems, False, jnp.dtype(bdt),
-            ).reshape((batch,) + tuple(tile))
-        else:
-            subs = jnp.zeros((batch,) + tuple(tile), jnp.dtype(bdt))
-        out = device.dequantize_tiles(
-            bins, subs, jnp.asarray(eps), jnp.dtype(dtype)
-        )
-        values[lo:hi] = np.asarray(out)[: hi - lo]
-    return values
-
-
 def _decode_tile_batch(c: bitstream.ContainerV2, tile_ids, layout, plan):
     """Decode a set of one container's tiles -> values (n, *tile)."""
     order = bool(c.header.flags & FLAG_ORDER_PRESERVING)
     eps_eff = effective_eps(c.header.eps_abs)
     items = [(c, t, eps_eff) for t in tile_ids]
-    return _decode_items(items, layout.tile, c.header.dtype, order,
-                         plan.batch_tiles)
+    return default_executor(plan, "auto").decode_items(
+        items, layout.tile, c.header.dtype, order, c.stream_words()
+    )
 
 
 def _layout_of(c: bitstream.ContainerV2, plan) -> TileLayout:
@@ -454,7 +331,7 @@ def decompress(blob: bytes, plan: CompressionPlan | None = None) -> np.ndarray:
 
     Tiles are independent sections (own crc, own RZE streams), so this
     decode is embarrassingly parallel; here they run as fixed-shape
-    device batches.
+    fused device batches.
     """
     plan = plan or DEFAULT_PLAN
     c = bitstream.read_container_v2(blob)
@@ -489,10 +366,11 @@ def decompress_many(blobs, plan: CompressionPlan | None = None):
     groups: dict[tuple, list[int]] = {}
     for i, (c, layout) in enumerate(parsed):
         order = bool(c.header.flags & FLAG_ORDER_PRESERVING)
-        groups.setdefault((np.dtype(c.header.dtype), layout.tile, order),
-                          []).append(i)
+        groups.setdefault((np.dtype(c.header.dtype), layout.tile, order,
+                           c.stream_words()), []).append(i)
     outs: list[np.ndarray | None] = [None] * len(parsed)
-    for (dtype, tile, order), members in groups.items():
+    ex = default_executor(plan, "auto")
+    for (dtype, tile, order, words), members in groups.items():
         items, spans = [], []
         for i in members:
             c, layout = parsed[i]
@@ -500,7 +378,7 @@ def decompress_many(blobs, plan: CompressionPlan | None = None):
             start = len(items)
             items.extend((c, t, eps_eff) for t in range(layout.n_tiles))
             spans.append((i, start, len(items)))
-        values = _decode_items(items, tile, dtype, order, plan.batch_tiles)
+        values = ex.decode_items(items, tile, dtype, order, words)
         for i, lo, hi in spans:
             c, layout = parsed[i]
             outs[i] = _assemble_field(values[lo:hi], c, layout)
@@ -512,7 +390,9 @@ def decompress_roi(blob: bytes, region: tuple[slice, ...],
     """Partial decode: reconstruct only ``region`` of the field.
 
     Touches exactly the tiles intersecting the region (the v2 index makes
-    them addressable without scanning the stream).
+    them addressable without scanning the stream).  Zero-volume regions
+    (empty or reversed slices) return an empty array without touching
+    the device.
     """
     plan = plan or DEFAULT_PLAN
     c = bitstream.read_container_v2(blob)
@@ -525,9 +405,10 @@ def decompress_roi(blob: bytes, region: tuple[slice, ...],
         for sl, n in zip(region, shape)
     )
     out_shape = tuple(sl.stop - sl.start for sl in canon_region)
+    final_shape = out_shape[3 - len(region):]
+    if not tile_ids or 0 in out_shape:
+        return np.empty(final_shape, np.dtype(c.header.dtype))
     out = np.empty(out_shape, np.dtype(c.header.dtype))
-    if not tile_ids:
-        return out.reshape(tuple(s for s in out_shape[3 - len(region):]))
     values = _decode_tile_batch(c, tile_ids, layout, plan)
     g1, g2 = layout.grid[1], layout.grid[2]
     t = layout.tile
@@ -542,7 +423,6 @@ def decompress_roi(blob: bytes, region: tuple[slice, ...],
             src.append(slice(lo - base, hi - base))
             dst.append(slice(lo - sl.start, hi - sl.start))
         out[tuple(dst)] = v[tuple(src)]
-    final_shape = out_shape[3 - len(region):]
     out = out.reshape(final_shape)
     if c.header.flags & FLAG_HAS_NONFINITE:
         out = decode_nonfinite_region(

@@ -1,0 +1,275 @@
+"""Device-resident executor: upload once, run fused programs, download once.
+
+The PR-1 engine orchestrated execution from the host: per-batch
+``np.asarray`` syncs after the frontend, numpy halo scatter/gather per
+relax round, and a re-upload of bins for the lossless stage.  The
+executor inverts that: a compress group's tiles are uploaded to the
+device once (padded to a bucketed *resident capacity* so programs stay
+shape-stable), the entire quantize → flags → solve → halo rounds →
+delta/zigzag/BIT/RZE pipeline runs as device-resident stage programs
+over the batch (``device.resident_compress``), and one download drains
+the fixed-shape encoded streams for host serialization.
+
+Transfer accounting
+-------------------
+``TRANSFER_COUNTS`` counts every host↔device crossing the executor
+makes, by category:
+
+  h2d_tiles      field-tile uploads (one per compress group)
+  h2d_aux        small operands: eps vector + halo index tables
+  d2h_aux        the one sub-max scalar (subbin width pick, at the
+                 solve's natural sync point)
+  d2h_sections   encoded-stream downloads (one per compress group)
+  h2d_sections   decode-side stream uploads (one per decode batch)
+  d2h_values     decoded-value downloads (one per decode batch)
+
+Tests assert the compress invariant — exactly one ``h2d_tiles`` and one
+``d2h_sections`` per group — and ``benchmarks/engine_bench.py`` records
+the counters next to MB/s so the resident path's win stays visible.
+
+Resident capacity
+-----------------
+Group tile counts pad up to a bucket: one shared bucket at or below the
+floor (mixed small fields never retrace), multiples of 4 above it
+(pad-tile compute waste bounded at 3 tiles).  Groups whose tile count
+lands in one warm bucket share every trace; the probe tests push mixed
+shapes/dtypes through one bucket and assert the trace counter does not
+move, and push varied shapes through many and assert steady state adds
+nothing.
+"""
+from __future__ import annotations
+
+from collections import Counter
+from dataclasses import dataclass
+from functools import lru_cache
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import bitstream
+from ..core.quantize import bin_dtype_for
+from . import device, halo
+from .plan import CompressionPlan, TileLayout
+
+TRANSFER_COUNTS: Counter = Counter()
+
+_CHUNK_WORDS = {2: 8192, 4: 4096, 8: 2048}  # word bytes -> words / 16 KiB
+
+# Section word widths adapt to the stored values (self-described by the
+# section header, so readers never guess): bins pick theirs host-side
+# from the value-range bound (engine._store_bin_dtype); subbins pick
+# int16 when the solved maximum fits, else int32 — values are < 2^31 by
+# the int32 halo-index guard, so the legacy int64 width is never needed.
+# Every halved width halves the chunk rows and bit-planes of the
+# dominant BIT/RZE stage on both ends of the pipeline.
+
+CAPACITY_FLOOR = 8
+
+
+def reset_transfer_counts() -> None:
+    TRANSFER_COUNTS.clear()
+
+
+def transfer_count(*keys: str) -> int:
+    return sum(TRANSFER_COUNTS[k] for k in keys) if keys else sum(
+        TRANSFER_COUNTS.values()
+    )
+
+
+def resident_capacity(n_tiles: int, floor: int = CAPACITY_FLOOR) -> int:
+    """Resident-batch bucket for a group of ``n_tiles`` tiles.
+
+    Everything at or below ``floor`` shares one bucket (the shape-mix
+    serving case: mixed small fields never retrace); above it, buckets
+    are multiples of 4, bounding pad-tile compute waste at 3 tiles —
+    each distinct bucket is one extra trace of the fused program, paid
+    once and then warm for every group of a similar size.
+    """
+    floor = max(4, floor)
+    if n_tiles <= floor:
+        return floor
+    return -(-n_tiles // 4) * 4
+
+
+def chunks_per_tile(layout: TileLayout, bdt) -> tuple[int, int]:
+    """-> (chunks per tile, chunk length in words)."""
+    chunk_len = _CHUNK_WORDS[np.dtype(bdt).itemsize]
+    return -(-layout.tile_elems // chunk_len), chunk_len
+
+
+@dataclass
+class GroupStreams:
+    """One compress group's encoded streams + solver diagnostics (host
+    arrays; the single download of the group)."""
+
+    bins: tuple[np.ndarray, np.ndarray, np.ndarray]   # bitmap, packed, counts
+    subs: tuple[np.ndarray, np.ndarray, np.ndarray] | None
+    local_sweeps: np.ndarray                          # (capacity,) int32
+    last_round: np.ndarray                            # (capacity,) int32
+    bins_cpt: int
+    subs_cpt: int
+
+
+class Executor:
+    """Execute half of the engine for one plan: fused, device-resident.
+
+    ``solver`` selects the subbin schedule (``auto``/``jacobi``/
+    ``frontier``/``blockwise``) — schedules differ in speed only; the
+    least fixed point is schedule-independent, so all of them emit
+    byte-identical containers (tested).  ``put`` optionally places each
+    uploaded array (e.g. a NamedSharding put from
+    distributed.compression); placement never changes bytes either.
+    """
+
+    def __init__(self, plan: CompressionPlan, solver: str = "auto",
+                 put=None):
+        if solver not in device.SOLVERS:
+            raise ValueError(f"unknown solver method {solver!r}")
+        self.plan = plan
+        self.solver = solver
+        self.put = put or (lambda a: jnp.asarray(a))
+
+    # ------------------------------------------------------------ compress
+
+    def compress_tiles(self, x_tiles: np.ndarray, eps_tiles: np.ndarray,
+                       layouts: tuple[TileLayout, ...], dtype,
+                       preserve_order: bool,
+                       bins_store=None) -> GroupStreams:
+        """Run one compress group device-resident.
+
+        ``x_tiles`` is the group's concatenated haloed tiles with NaN
+        marking every cell outside a field (pad, border); ``eps_tiles``
+        the per-tile effective bounds; ``bins_store`` the (possibly
+        narrowed) section word dtype for the bins stream.  Exactly one
+        tile upload and one stream download happen here, whatever the
+        solver or round count.
+        """
+        layout0 = layouts[0]
+        n_total = x_tiles.shape[0]
+        capacity = resident_capacity(n_total, max(CAPACITY_FLOOR,
+                                                  self.plan.batch_tiles))
+        bins_store = np.dtype(bins_store or bin_dtype_for(dtype))
+        bins_cpt, bins_chunk = chunks_per_tile(layout0, bins_store)
+        idx, mask = halo.group_index(layouts, capacity)
+
+        pad = capacity - n_total
+        if pad:
+            x_tiles = np.concatenate([
+                x_tiles,
+                np.full((pad,) + x_tiles.shape[1:], np.nan, x_tiles.dtype),
+            ])
+            eps_tiles = np.concatenate([eps_tiles, np.ones(pad, np.float64)])
+
+        solver, interpret = device.resolve_solver(self.solver)
+        TRANSFER_COUNTS["h2d_tiles"] += 1
+        x_dev = self.put(x_tiles)
+        TRANSFER_COUNTS["h2d_aux"] += 3
+        eps_dev = self.put(eps_tiles)
+        idx_dev = self.put(idx)
+        mask_dev = self.put(mask)
+        max_rounds = jnp.asarray(n_total * layout0.tile_elems + 2, jnp.int64)
+
+        bins_s, sub_dev, local1, last_round, sub_max = device.resident_compress(
+            x_dev, eps_dev, idx_dev, mask_dev, max_rounds,
+            dtype=jnp.dtype(dtype), preserve_order=preserve_order,
+            solver=solver, interpret=interpret,
+            local_max_iters=layout0.tile_elems + 2,
+            bins_store=jnp.dtype(bins_store), bins_chunk=bins_chunk,
+        )
+        subs_s = None
+        subs_cpt = 0
+        if preserve_order:
+            TRANSFER_COUNTS["d2h_aux"] += 1  # one scalar at the solve sync
+            sub_store = (np.dtype(np.int16) if int(sub_max) < 2**15
+                         else np.dtype(np.int32))
+            subs_cpt, subs_chunk = chunks_per_tile(layout0, sub_store)
+            subs_s = device.encode_tiles(
+                sub_dev.astype(jnp.dtype(sub_store)).reshape(capacity, -1),
+                subs_chunk, False,
+            )
+        TRANSFER_COUNTS["d2h_sections"] += 1
+        bins_s, subs_s, local1, last_round = jax.device_get(
+            (bins_s, subs_s, local1, last_round)
+        )
+        return GroupStreams(bins_s, subs_s, local1, last_round, bins_cpt,
+                            subs_cpt)
+
+    # ------------------------------------------------------------- decode
+
+    def decode_items(self, items, tile: tuple[int, int, int], dtype,
+                     order: bool, words: tuple[int, int]) -> np.ndarray:
+        """Decode a mixed tile work-list -> values (n, *tile).
+
+        ``items`` is a list of (container, tile_id, eps_eff) sharing one
+        (tile shape, dtype, order, section words) signature — tiles of
+        *different blobs* ride the same fixed-shape device batches,
+        mirroring the compress side's request coalescing.  ``words`` is
+        the (bins, subs) section word width in bytes, read from the
+        containers (old int64-width blobs decode through the same path).
+        One stream upload, one resident decode chain, one value download.
+        """
+        dtype = np.dtype(dtype)
+        tile_elems = int(np.prod(tile))
+        if order and words[1] not in _CHUNK_WORDS:
+            # header flags promise a subbin stream the sections lack
+            raise ValueError("corrupt LOPC container (missing subbin stream)")
+        n = len(items)
+        batch = resident_capacity(n, max(CAPACITY_FLOOR,
+                                         self.plan.batch_tiles))
+
+        def alloc(word):
+            chunk_len = _CHUNK_WORDS[word]
+            cpt = -(-tile_elems // chunk_len)
+            udt = f"<u{word}"
+            bitmap = np.zeros((batch * cpt, chunk_len // (word * 8)), udt)
+            packed = np.zeros((batch * cpt, chunk_len), udt)
+            return bitmap, packed, cpt
+
+        bitmap, packed, bins_cpt = alloc(words[0])
+        if order:
+            sub_bitmap, sub_packed, subs_cpt = alloc(words[1])
+        eps = np.ones(batch, np.float64)
+        for j, (c, t, eps_eff) in enumerate(items):
+            eps[j] = eps_eff
+            bins_b, sub_b = c.tile_payloads(t)
+            _fill_rows(bitmap, packed, bins_b, j * bins_cpt, bins_cpt)
+            if order:
+                _fill_rows(sub_bitmap, sub_packed, sub_b, j * subs_cpt,
+                           subs_cpt)
+        TRANSFER_COUNTS["h2d_sections"] += 1
+        if order:
+            out = device.resident_decode_order(
+                self.put(bitmap), self.put(packed),
+                self.put(sub_bitmap), self.put(sub_packed),
+                self.put(eps), tile_elems=tile_elems,
+                dtype=jnp.dtype(dtype),
+            )
+        else:
+            out = device.resident_decode_plain(
+                self.put(bitmap), self.put(packed), self.put(eps),
+                tile_elems=tile_elems, dtype=jnp.dtype(dtype),
+            )
+        TRANSFER_COUNTS["d2h_values"] += 1
+        return np.asarray(out)[:n].reshape((n,) + tuple(tile))
+
+
+def _fill_rows(bitmap: np.ndarray, packed: np.ndarray, section: bytes,
+               row0: int, cpt: int) -> None:
+    """Deserialize one tile section into its chunk-row span.
+
+    Sections may carry *fewer* than ``cpt`` chunks: the serializer trims
+    trailing all-zero chunks (pad-cell waste), and missing rows decode as
+    zero words — exactly the zeros the trim removed.
+    """
+    bm, pk = bitstream.deserialize_rze_section(section)
+    if bm.shape[0] > cpt:
+        raise ValueError("corrupt LOPC container (tile section too long)")
+    bitmap[row0 : row0 + bm.shape[0]] = bm
+    packed[row0 : row0 + pk.shape[0]] = pk
+
+
+@lru_cache(maxsize=64)
+def default_executor(plan: CompressionPlan, solver: str) -> Executor:
+    """Shared executors for the common no-custom-put case."""
+    return Executor(plan, solver)

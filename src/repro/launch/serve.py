@@ -54,14 +54,17 @@ def serve_compression(args):
         )
     total_mb = sum(x.nbytes for x in fields) / 1e6
 
-    # warm-up traces every (tile_shape, dtype) program the mix needs
-    # (with auto tiling different request shapes can bucket to several
-    # tile shapes), so the timed run below measures execution only
-    engine.decompress_many(engine.compress_many(fields, args.eb, plan=plan),
-                           plan=plan)
+    # warm-up traces every (tile_shape, capacity, dtype) program the mix
+    # needs (with auto tiling different request shapes can bucket to
+    # several tile shapes), so the timed run below measures execution only
+    engine.decompress_many(
+        engine.compress_many(fields, args.eb, plan=plan, solver=args.solver),
+        plan=plan,
+    )
+    engine.executor.reset_transfer_counts()
     t0 = time.perf_counter()
     blobs, stats = engine.compress_many(fields, args.eb, plan=plan,
-                                        return_stats=True)
+                                        solver=args.solver, return_stats=True)
     t_c = time.perf_counter() - t0
     t0 = time.perf_counter()
     outs = engine.decompress_many(blobs, plan=plan)
@@ -71,12 +74,16 @@ def serve_compression(args):
         bound = args.eb * (float(x.max()) - float(x.min()))
         assert np.abs(x.astype(np.float64) - y.astype(np.float64)).max() <= bound
     ratio = sum(x.nbytes for x in fields) / sum(len(b) for b in blobs)
+    tc = dict(engine.executor.TRANSFER_COUNTS)
     print(f"compression service: {args.requests} requests "
           f"({total_mb:.2f} MB mixed f32/f64, shapes coalesced into "
-          f"shared tile batches)")
+          f"device-resident tile batches, solver={args.solver})")
     print(f"  compress   {total_mb / t_c:8.1f} MB/s  ({t_c * 1e3:.0f} ms)")
     print(f"  decompress {total_mb / t_d:8.1f} MB/s  ({t_d * 1e3:.0f} ms)")
     print(f"  ratio      {ratio:8.2f}x   traces {engine.device.trace_count()}")
+    print(f"  transfers  {tc.get('h2d_tiles', 0)} tile uploads / "
+          f"{tc.get('d2h_sections', 0)} stream downloads "
+          f"(one per compress group)")
 
     # region-of-interest decode: the v2 tile index pays off
     x = fields[0]
@@ -154,6 +161,10 @@ def main():
                     help="compression service: fixed tile shape t0,t1,t2 "
                          "(default: auto per request)")
     ap.add_argument("--batch-tiles", type=int, default=8)
+    ap.add_argument("--solver", default="auto",
+                    choices=["auto", "jacobi", "frontier", "blockwise"],
+                    help="compression service: subbin schedule (speed "
+                         "only; bytes are schedule-independent)")
     args = ap.parse_args()
 
     if args.compress_service:
