@@ -1,0 +1,126 @@
+"""CI determinism gate: the paper's bit-for-bit claim as a standing check.
+
+Compresses every generator field (both dtypes, mixed ranks) with each
+subbin solver schedule and verifies, by SHA-256 of the emitted v2
+containers, that
+
+  * all schedules (``jacobi`` and the Pallas ``blockwise`` kernel, which
+    runs in interpret mode off-TPU) emit byte-identical containers —
+    the schedule-independence of the least fixed point (paper §IV-E);
+  * the bytes match the committed manifest
+    (``benchmarks/baselines/determinism_hashes.json``) — so a numerics
+    drift anywhere in quantize/solve/encode (new jax version, new
+    platform, accidental float reassociation) fails CI instead of
+    silently changing archived containers;
+  * every container round-trips within its error bound.
+
+Inputs are synthesized deterministically (crc32-seeded generators), so
+the hashes are machine-independent by construction — exactly the
+reproducibility the paper claims for CPU vs GPU runs.
+
+  JAX_PLATFORMS=cpu PYTHONPATH=src python -m benchmarks.check_determinism
+  PYTHONPATH=src python -m benchmarks.check_determinism --update-manifest
+"""
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import sys
+from pathlib import Path
+
+import numpy as np
+
+MANIFEST_PATH = (
+    Path(__file__).resolve().parent / "baselines" / "determinism_hashes.json"
+)
+
+SOLVERS = ("jacobi", "blockwise")
+EB = 1e-2
+SHAPES = ((13, 11, 9), (40, 28), (500,))
+DTYPES = ("float32", "float64")
+
+
+def compute_hashes() -> tuple[dict, list[str]]:
+    """-> ({case: sha256}, [cross-solver violations])."""
+    from repro import engine
+    from repro.data.fields import FIELD_GENERATORS, make_scientific_field
+
+    hashes = {}
+    problems = []
+    for name in sorted(FIELD_GENERATORS):
+        for shape in SHAPES:
+            for dtype in DTYPES:
+                x = make_scientific_field(name, shape, np.dtype(dtype), seed=5)
+                case = f"{name}/{'x'.join(map(str, shape))}/{dtype}"
+                blobs = {s: engine.compress(x, EB, solver=s) for s in SOLVERS}
+                ref = blobs[SOLVERS[0]]
+                for s, b in blobs.items():
+                    if b != ref:
+                        problems.append(
+                            f"{case}: solver {s} bytes differ from "
+                            f"{SOLVERS[0]} (schedule independence broken)"
+                        )
+                y = engine.decompress(ref)
+                bound = EB * (float(x.max()) - float(x.min()))
+                err = float(np.abs(x.astype(np.float64)
+                                   - y.astype(np.float64)).max())
+                if err > bound:
+                    problems.append(
+                        f"{case}: round-trip error {err:.3e} exceeds "
+                        f"bound {bound:.3e}"
+                    )
+                hashes[case] = hashlib.sha256(ref).hexdigest()
+    return hashes, problems
+
+
+def compare(manifest: dict, hashes: dict) -> list[str]:
+    problems = []
+    for case, want in manifest.items():
+        got = hashes.get(case)
+        if got is None:
+            problems.append(f"{case}: case missing from this run")
+        elif got != want:
+            problems.append(
+                f"{case}: container hash {got[:16]}... != manifest "
+                f"{want[:16]}... (bit-for-bit determinism broken)"
+            )
+    for case in hashes:
+        if case not in manifest:
+            problems.append(f"{case}: not in manifest (run --update-manifest)")
+    return problems
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--manifest", type=Path, default=MANIFEST_PATH)
+    ap.add_argument("--update-manifest", action="store_true",
+                    help="rewrite the committed hash manifest from this run")
+    args = ap.parse_args(argv)
+
+    hashes, problems = compute_hashes()
+    if args.update_manifest:
+        if problems:  # never pin bytes that already violate the contract
+            print("refusing to update manifest; violations:")
+            for p in problems:
+                print(f"  - {p}")
+            return 1
+        args.manifest.parent.mkdir(parents=True, exist_ok=True)
+        args.manifest.write_text(json.dumps(hashes, indent=1) + "\n")
+        print(f"manifest updated: {len(hashes)} cases -> {args.manifest}")
+        return 0
+
+    manifest = json.loads(args.manifest.read_text())
+    problems += compare(manifest, hashes)
+    if problems:
+        print(f"determinism gate FAILED ({len(problems)} problem(s)):")
+        for p in problems:
+            print(f"  - {p}")
+        return 1
+    print(f"determinism gate passed: {len(hashes)} cases, "
+          f"{len(SOLVERS)} solvers byte-identical, manifest matched")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,122 @@
+"""CI bench regression gate: deterministic quality metrics only.
+
+Compares a fresh ``BENCH_engine.json`` against the committed baseline
+(``benchmarks/baselines/engine_baseline.json``) and fails on:
+
+  * a per-field compression-ratio drop of more than ``--ratio-tol``
+    (default 1%) — ratio depends only on the emitted bytes, which the
+    paper (and our determinism job) pin bit-for-bit, so any drop is a
+    real encoding regression, not machine noise;
+  * any increase in a per-compress transfer counter — the resident
+    executor's 1-upload/1-download contract; an extra host<->device
+    crossing is an architectural regression even when MB/s happens to
+    look fine on the runner.
+
+Throughput numbers are deliberately NOT gated: CI machines are shared
+and MB/s is noise there; the bench still records it for trajectory.
+
+  PYTHONPATH=src python -m benchmarks.check_regression
+  PYTHONPATH=src python -m benchmarks.check_regression --update-baseline
+
+``--update-baseline`` rewrites the baseline from the current bench
+output (run after an intentional ratio/transfer change, commit the
+result).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+BENCH_PATH = Path(__file__).resolve().parent / "results" / "BENCH_engine.json"
+BASELINE_PATH = (
+    Path(__file__).resolve().parent / "baselines" / "engine_baseline.json"
+)
+
+RATIO_TOL = 0.01
+
+
+def extract_baseline(bench: dict) -> dict:
+    """The gated (deterministic) slice of a BENCH_engine.json report."""
+    return {
+        "eb": bench["eb"],
+        "mode": bench["mode"],
+        "tile_shape": bench["tile_shape"],
+        "fields": {
+            name: {
+                "ratio": row["engine"]["ratio"],
+                "transfers_per_compress": dict(row["transfers_per_compress"]),
+            }
+            for name, row in bench["fields"].items()
+        },
+    }
+
+
+def check(baseline: dict, bench: dict, ratio_tol: float = RATIO_TOL) -> list[str]:
+    """-> list of violations (empty means the gate passes)."""
+    problems = []
+    for key in ("eb", "mode", "tile_shape"):
+        if bench.get(key) != baseline.get(key):
+            problems.append(
+                f"bench config drifted: {key}={bench.get(key)!r} vs "
+                f"baseline {baseline.get(key)!r} (baseline ratios are only "
+                "comparable at the same configuration)"
+            )
+    for name, base in baseline["fields"].items():
+        row = bench["fields"].get(name)
+        if row is None:
+            problems.append(f"{name}: field missing from bench output")
+            continue
+        ratio = row["engine"]["ratio"]
+        floor = base["ratio"] * (1.0 - ratio_tol)
+        if ratio < floor:
+            problems.append(
+                f"{name}: compression ratio {ratio:.4f} fell more than "
+                f"{ratio_tol:.1%} below baseline {base['ratio']:.4f}"
+            )
+        tpc = row["transfers_per_compress"]
+        for k, limit in base["transfers_per_compress"].items():
+            got = tpc.get(k, 0.0)
+            if got > limit:
+                problems.append(
+                    f"{name}: transfer counter {k} rose to {got:g} "
+                    f"per compress (baseline {limit:g}) — the resident "
+                    "1-upload/1-download contract regressed"
+                )
+    return problems
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--bench", type=Path, default=BENCH_PATH)
+    ap.add_argument("--baseline", type=Path, default=BASELINE_PATH)
+    ap.add_argument("--ratio-tol", type=float, default=RATIO_TOL)
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="rewrite the baseline from the current bench output")
+    args = ap.parse_args(argv)
+
+    bench = json.loads(args.bench.read_text())
+    if args.update_baseline:
+        args.baseline.parent.mkdir(parents=True, exist_ok=True)
+        args.baseline.write_text(
+            json.dumps(extract_baseline(bench), indent=1) + "\n"
+        )
+        print(f"baseline updated from {args.bench} -> {args.baseline}")
+        return 0
+
+    baseline = json.loads(args.baseline.read_text())
+    problems = check(baseline, bench, args.ratio_tol)
+    if problems:
+        print(f"bench regression gate FAILED ({len(problems)} problem(s)):")
+        for p in problems:
+            print(f"  - {p}")
+        return 1
+    n = len(baseline["fields"])
+    print(f"bench regression gate passed: {n} fields within "
+          f"{args.ratio_tol:.1%} ratio tolerance, no transfer growth")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -13,7 +13,8 @@ import time
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="table3|table45|table67|fig3|fig4|table89|engine|roofline")
+                    help="table3|table45|table67|fig3|fig4|table89|engine|"
+                         "service|roofline")
     args = ap.parse_args()
 
     from . import (  # noqa: WPS433
@@ -21,6 +22,7 @@ def main() -> None:
         fig3_eb_sweep,
         fig4_binsplit,
         roofline,
+        service_bench,
         table3_preservation,
         table45_topo,
         table67_nontopo,
@@ -36,6 +38,7 @@ def main() -> None:
         "fig4": fig4_binsplit.run,
         "table89": table89_quality.run,
         "engine": engine_bench.run,
+        "service": service_bench.run,
     }
     t0 = time.time()
     inputs = load_inputs()

@@ -1,0 +1,184 @@
+"""Service load sweep: offered load vs latency / batch occupancy.
+
+Drives the async micro-batching service (``repro.service``) with pools
+of concurrent synthetic clients at increasing offered load and records,
+per load point, latency percentiles (full submit->resolve time), wall
+throughput, coalescer batch occupancy, device-group occupancy, and the
+executor's transfer counters — the serving-side companion of
+``engine_bench.py``, written to ``BENCH_service.json``.
+
+The workload is a fixed mixed-shape/dtype request set against one
+production plan, warmed with a full pass at the highest load before the
+sweep, so load points measure steady-state scheduling, not compile
+time; the per-point trace delta is recorded so any residual compile
+cost is visible rather than silently folded into latency (resident
+capacity buckets are composition-dependent, so a rare new bucket can
+still appear — the *controlled* zero-retrace guarantee is asserted in
+tests/test_service.py where traffic is deterministic).  Before the
+sweep every warmup container is compared byte-for-byte against a direct
+``engine.compress`` call — the service must be pure scheduling, never a
+different compressor.
+
+  PYTHONPATH=src python -m benchmarks.run --only service
+"""
+from __future__ import annotations
+
+import json
+import platform
+import time
+from concurrent.futures import ThreadPoolExecutor
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro import engine
+from repro.data.fields import make_scientific_field
+from repro.engine.plan import CompressionPlan
+from repro.service import CompressionService, ServiceConfig, ServiceOverloaded
+
+from .common import emit
+
+OUT_PATH = Path(__file__).resolve().parent / "results" / "BENCH_service.json"
+
+PLAN = CompressionPlan(tile_shape=(16, 16, 64), batch_tiles=8)
+EB = 1e-2
+CLIENT_POOLS = (1, 4, 8, 16)        # offered load: concurrent clients
+REQUESTS_PER_CLIENT = 4
+MAX_DELAY_MS = 5.0
+
+# bounded shape family (so warmup covers every (tile, capacity, dtype)
+# bucket and the sweep shows 0 retraces), mixed rank and dtype
+SHAPES = [(32, 32, 32), (24, 40, 16), (48, 33), (4000,)]
+DTYPES = (np.float32, np.float64)
+GENS = ("gaussians", "turbulence", "waves", "front")
+
+
+def _workload(seed: int, n: int) -> list[np.ndarray]:
+    rng = np.random.default_rng(seed)
+    out = []
+    for i in range(n):
+        j = int(rng.integers(len(SHAPES)))
+        out.append(make_scientific_field(
+            GENS[(seed + i) % len(GENS)], SHAPES[j],
+            DTYPES[(j + i) % len(DTYPES)], seed=seed * 131 + i,
+        ))
+    return out
+
+
+def _client(svc: CompressionService, seed: int, n: int) -> float:
+    """Pipelined client: compress all, then round-trip decompress all.
+    Returns the MB it pushed through.  Overload rejections honor the
+    advertised retry-after."""
+    fields = _workload(seed, n)
+
+    def retrying(fn, *a):
+        while True:
+            try:
+                return fn(*a)
+            except ServiceOverloaded as e:
+                time.sleep(e.retry_after)
+
+    futs = [retrying(svc.submit_compress, x, EB) for x in fields]
+    blobs = [f.result() for f in futs]
+    outs = [f.result()
+            for f in [retrying(svc.submit_decompress, b) for b in blobs]]
+    for x, y in zip(fields, outs):
+        bound = EB * (float(x.max()) - float(x.min()))
+        assert np.abs(x.astype(np.float64) - y.astype(np.float64)).max() \
+            <= bound
+    return sum(x.nbytes for x in fields) / 1e6
+
+
+def run(inputs=None) -> dict:
+    del inputs  # synthetic mixed-shape workload, not the paper fields
+    cfg = ServiceConfig(plan=PLAN, solver="auto", max_delay_ms=MAX_DELAY_MS,
+                        max_batch_requests=64, max_queue=1024)
+    report = {
+        "eb": EB,
+        "plan": {"tile_shape": list(PLAN.tile_shape),
+                 "batch_tiles": PLAN.batch_tiles},
+        "max_delay_ms": MAX_DELAY_MS,
+        "requests_per_client": REQUESTS_PER_CLIENT,
+        "backend": jax.default_backend(),
+        "platform": platform.platform(),
+        "load_points": [],
+    }
+    rows = []
+    with CompressionService(cfg) as svc:
+        # warm every per-shape program bucket off the clock
+        warm = [make_scientific_field(g, s, d, seed=7)
+                for s in SHAPES for d in DTYPES for g in GENS[:1]]
+        wblobs = [f.result()
+                  for f in [svc.submit_compress(x, EB) for x in warm]]
+        for f in [svc.submit_decompress(b) for b in wblobs]:
+            f.result()
+        # byte contract: service == direct engine call, bit for bit
+        for x, b in zip(warm, wblobs):
+            assert b == engine.compress(x, EB, plan=PLAN), \
+                "service bytes diverged from direct engine compress"
+        def load_pass(n_clients: int):
+            t0 = time.perf_counter()
+            with ThreadPoolExecutor(n_clients) as pool:
+                mbs = list(pool.map(
+                    lambda cid: _client(svc, cid, REQUESTS_PER_CLIENT),
+                    range(n_clients),
+                ))
+            return mbs, time.perf_counter() - t0
+
+        for n_clients in CLIENT_POOLS:
+            # unmeasured pass first: group sizes (and hence resident
+            # capacity buckets) scale with load, so each point warms the
+            # buckets its own batches land in before the clock starts
+            load_pass(n_clients)
+            svc.metrics_recorder.reset_window()
+            m0 = svc.metrics()
+            trace0 = engine.device.trace_count()
+            mbs, wall = load_pass(n_clients)
+            m = svc.metrics()
+            batches = m.batches - m0.batches
+            occupancy = (
+                (m.mean_batch_occupancy * m.batches
+                 - m0.mean_batch_occupancy * m0.batches) / batches
+                if batches else 0.0
+            )
+            point = {
+                "clients": n_clients,
+                "requests": m.completed - m0.completed,
+                "mb": sum(mbs),
+                "wall_s": wall,
+                "wall_mbps": sum(mbs) / wall,
+                "p50_ms": m.p50_ms,
+                "p99_ms": m.p99_ms,
+                "batches": batches,
+                "mean_batch_occupancy": occupancy,
+                "max_batch_occupancy": m.max_batch_occupancy,
+                "mean_device_group_occupancy": m.mean_device_group_occupancy,
+                "traces_added": engine.device.trace_count() - trace0,
+                "rejected_so_far": m.rejected,
+            }
+            report["load_points"].append(point)
+            rows.append((
+                f"service_{n_clients}_clients", wall,
+                f"{point['wall_mbps']:.1f}MB/s p50={point['p50_ms']:.0f}ms "
+                f"p99={point['p99_ms']:.0f}ms occ={occupancy:.2f} "
+                f"traces+{point['traces_added']}",
+            ))
+        report["final_metrics"] = {
+            k: v for k, v in vars(svc.metrics()).items()
+            if not isinstance(v, np.ndarray)
+        }
+
+    concurrent = [p for p in report["load_points"] if p["clients"] > 1]
+    report["mean_occupancy_concurrent"] = (
+        sum(p["mean_batch_occupancy"] for p in concurrent) / len(concurrent)
+    )
+    # the serving claim: under concurrent load, coalescing must actually
+    # happen — more than one request per drained batch on average
+    assert report["mean_occupancy_concurrent"] > 1.0
+
+    OUT_PATH.parent.mkdir(parents=True, exist_ok=True)
+    OUT_PATH.write_text(json.dumps(report, indent=1))
+    emit(rows, f"service load sweep (eb={EB}, delay={MAX_DELAY_MS}ms) "
+               f"-> {OUT_PATH}")
+    return report

@@ -124,11 +124,12 @@ class _Request:
         # bound on |bin| (quantize = round + <=2 correction steps), known
         # before any device work — it picks the narrowest section width
         self.max_bin = float(np.max(np.abs(x), initial=0.0)) / self.eps_eff + 4
+        self.bins_store = _store_bin_dtype(self.max_bin, np.dtype(x.dtype))
         self.layout = plan.layout_for(x.shape)
         self.sweeps = 0
 
 
-def _store_bin_dtype(reqs, dtype) -> np.dtype:
+def _store_bin_dtype(max_bin: float, dtype) -> np.dtype:
     """Narrowest section word width whose bins (and their deltas) fit.
 
     The v2 tile sections are self-describing (word size in the header),
@@ -139,9 +140,14 @@ def _store_bin_dtype(reqs, dtype) -> np.dtype:
     BIT/RZE stage on both ends of the pipeline.  The bound is doubled so
     per-chunk deltas cannot wrap (wrapping would still decode exactly —
     two's complement cumsum inverts it — but costs ratio).
+
+    The width is a *per-request* property (computed from the request's
+    own value bound) and part of the compress group key, so batching a
+    request with wider-valued neighbors never changes its bytes — the
+    service layer's coalescing is byte-transparent.
     """
     native = np.dtype(bin_dtype_for(dtype))
-    bound = 2 * max(r.max_bin for r in reqs) + 4
+    bound = 2 * max_bin + 4
     for cand in (np.dtype(np.int16), np.dtype(np.int32)):
         if cand.itemsize < native.itemsize and bound < np.iinfo(cand).max:
             return cand
@@ -181,15 +187,22 @@ def compress_many(
     plan: CompressionPlan | None = None,
     return_stats: bool = False,
     put=None,
+    group_cb=None,
 ):
     """Compress a batch of scalar fields into v2 containers.
 
     ``fields`` may mix shapes, ranks, and dtypes; ``eb`` is one bound or
     a per-field sequence.  Tiles of all requests are coalesced into
-    shared device-resident batches (grouped by (dtype, tile_shape)) —
-    both the throughput path and what keeps jit traces constant across
-    arbitrary request mixes.  ``put`` optionally places each uploaded
-    array (e.g. a NamedSharding put from distributed.compression).
+    shared device-resident batches (grouped by (dtype, tile_shape,
+    bins_store) — the stored bins width is a per-request property, so
+    group composition never changes a request's bytes) — both the
+    throughput path and what keeps jit traces constant across arbitrary
+    request mixes.  ``put`` optionally places each uploaded array (e.g.
+    a NamedSharding put from distributed.compression).  ``group_cb``,
+    when given, is called once per device group with a summary dict
+    (``kind``/``dtype``/``tile``/``n_requests``/``n_tiles``) — the hook
+    the service layer uses to report per-batch device occupancy without
+    re-deriving the grouping.
 
     Returns a list of blobs, or (blobs, stats) when ``return_stats``.
     """
@@ -207,11 +220,19 @@ def compress_many(
 
     groups: dict[tuple, list[int]] = {}
     for i, r in enumerate(reqs):
-        groups.setdefault((np.dtype(r.x.dtype), r.layout.tile), []).append(i)
+        groups.setdefault(
+            (np.dtype(r.x.dtype), r.layout.tile, r.bins_store), []
+        ).append(i)
 
     blobs: list[bytes | None] = [None] * len(reqs)
     stats: list[CompressStats | None] = [None] * len(reqs)
-    for (dtype, _tile), members in groups.items():
+    for (dtype, tile, _store), members in groups.items():
+        if group_cb is not None:
+            group_cb({
+                "kind": "compress", "dtype": str(dtype), "tile": tile,
+                "n_requests": len(members),
+                "n_tiles": sum(reqs[i].layout.n_tiles for i in members),
+            })
         _compress_group(
             [reqs[i] for i in members], dtype, ex, preserve_order,
             [blobs, stats], members, return_stats,
@@ -246,7 +267,7 @@ def _compress_group(reqs, dtype, ex: Executor, preserve_order, out, members,
     gs = ex.compress_tiles(
         np.concatenate(x_tiles), np.concatenate(eps_tiles),
         tuple(r.layout for r in reqs), dtype, preserve_order,
-        bins_store=_store_bin_dtype(reqs, dtype),
+        bins_store=reqs[0].bins_store,  # identical across the group (key)
     )
 
     # ---- per-request solver diagnostics (sweeps are never serialized)
@@ -354,10 +375,12 @@ def _assemble_field(values, c: bitstream.ContainerV2, layout: TileLayout):
     return out
 
 
-def decompress_many(blobs, plan: CompressionPlan | None = None):
+def decompress_many(blobs, plan: CompressionPlan | None = None,
+                    group_cb=None):
     """Batched decode: tiles of all containers with one (tile_shape,
     dtype, order) signature share device batches — the decode-side
-    mirror of compress_many's request coalescing."""
+    mirror of compress_many's request coalescing.  ``group_cb`` mirrors
+    :func:`compress_many`'s per-device-group reporting hook."""
     plan = plan or DEFAULT_PLAN
     parsed = []
     for b in blobs:
@@ -371,6 +394,12 @@ def decompress_many(blobs, plan: CompressionPlan | None = None):
     outs: list[np.ndarray | None] = [None] * len(parsed)
     ex = default_executor(plan, "auto")
     for (dtype, tile, order, words), members in groups.items():
+        if group_cb is not None:
+            group_cb({
+                "kind": "decompress", "dtype": str(dtype), "tile": tile,
+                "n_requests": len(members),
+                "n_tiles": sum(parsed[i][1].n_tiles for i in members),
+            })
         items, spans = [], []
         for i in members:
             c, layout = parsed[i]

@@ -6,94 +6,155 @@ LLM mode (unchanged):
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b \
       --reduced --requests 4 --prompt-len 48 --gen 16 --kv-quant
 
-Compression-service mode — concurrent field-compression requests of
-mixed shapes/ranks are coalesced by the engine into shared fixed-shape
-tile batches (one jit trace per tile shape, regardless of the request
-mix), then decoded back tile-parallel:
+Compression-service mode — a pool of concurrent client threads fires
+mixed-shape compress/decompress/ROI requests at the async
+micro-batching service (``repro.service``); the deadline/size coalescer
+drains them into shared device batches and the run reports latency
+percentiles, batch occupancy, and transfer counters:
 
   PYTHONPATH=src python -m repro.launch.serve --compress-service \
-      --requests 12 --eb 1e-2 --tile 16,16,64 --batch-tiles 8
+      --clients 8 --requests-per-client 6 --eb 1e-2 --tile 16,16,64 \
+      --max-delay-ms 5
 """
 from __future__ import annotations
 
 import argparse
 import time
+from concurrent.futures import ThreadPoolExecutor
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 
-def serve_compression(args):
-    """Simulate a steady stream of mixed-shape compression requests
-    against ONE shared CompressionPlan (the production configuration:
-    trace once, serve everything)."""
-    from repro import engine
+def _parse_tile(text):
+    if not text or text == "auto":
+        return None
+    try:
+        tile = tuple(int(t) for t in text.split(","))
+        if len(tile) != 3 or min(tile) < 1:
+            raise ValueError
+        return tile
+    except ValueError:
+        raise SystemExit(
+            f"--tile wants three positive ints 't0,t1,t2', got {text!r}"
+        )
+
+
+def _client_workload(rng_seed: int, n: int):
+    """One client's request stream: mixed shapes, ranks, dtypes."""
     from repro.data.fields import make_scientific_field
 
-    tile = None
-    if args.tile:
-        try:
-            tile = tuple(int(t) for t in args.tile.split(","))
-            if len(tile) != 3 or min(tile) < 1:
-                raise ValueError
-        except ValueError:
-            raise SystemExit(
-                f"--tile wants three positive ints 't0,t1,t2', got {args.tile!r}"
-            )
-    plan = engine.CompressionPlan(tile_shape=tile, batch_tiles=args.batch_tiles)
-
-    rng = np.random.default_rng(0)
+    rng = np.random.default_rng(rng_seed)
     names = ["gaussians", "turbulence", "waves", "front"]
     fields = []
-    for i in range(args.requests):
-        shape = tuple(int(rng.integers(12, 40)) for _ in range(3))
+    for i in range(n):
+        ndim = int(rng.integers(1, 4))
+        shape = tuple(int(rng.integers(12, 40)) for _ in range(ndim))
         fields.append(
-            make_scientific_field(names[i % len(names)], shape,
-                                  np.float64 if i % 2 else np.float32, seed=i)
+            make_scientific_field(names[(rng_seed + i) % len(names)], shape,
+                                  np.float64 if i % 2 else np.float32,
+                                  seed=rng_seed * 97 + i)
         )
-    total_mb = sum(x.nbytes for x in fields) / 1e6
+    return fields
 
-    # warm-up traces every (tile_shape, capacity, dtype) program the mix
-    # needs (with auto tiling different request shapes can bucket to
-    # several tile shapes), so the timed run below measures execution only
-    engine.decompress_many(
-        engine.compress_many(fields, args.eb, plan=plan, solver=args.solver),
-        plan=plan,
+
+def serve_compression(args):
+    """Drive the micro-batching service with a concurrent client pool.
+
+    Every client thread compresses its own stream of fields, immediately
+    round-trips each container (decompress) and reads one ROI — the
+    concurrent mixed-kind traffic the coalescer exists for.  Outputs are
+    verified byte-identical to direct engine calls, so the service layer
+    is pure scheduling, never a different compressor.
+    """
+    from repro import engine
+    from repro.engine.plan import CompressionPlan
+    from repro.service import CompressionService, ServiceConfig, ServiceOverloaded
+
+    cfg = ServiceConfig(
+        plan=CompressionPlan(tile_shape=_parse_tile(args.tile),
+                             batch_tiles=args.batch_tiles),
+        solver=args.solver,
+        max_delay_ms=args.max_delay_ms,
+        max_batch_requests=args.max_batch,
+        max_queue=args.max_queue,
     )
-    engine.executor.reset_transfer_counts()
-    t0 = time.perf_counter()
-    blobs, stats = engine.compress_many(fields, args.eb, plan=plan,
-                                        solver=args.solver, return_stats=True)
-    t_c = time.perf_counter() - t0
-    t0 = time.perf_counter()
-    outs = engine.decompress_many(blobs, plan=plan)
-    t_d = time.perf_counter() - t0
 
-    for x, y, s in zip(fields, outs, stats):
-        bound = args.eb * (float(x.max()) - float(x.min()))
-        assert np.abs(x.astype(np.float64) - y.astype(np.float64)).max() <= bound
-    ratio = sum(x.nbytes for x in fields) / sum(len(b) for b in blobs)
-    tc = dict(engine.executor.TRANSFER_COUNTS)
-    print(f"compression service: {args.requests} requests "
-          f"({total_mb:.2f} MB mixed f32/f64, shapes coalesced into "
-          f"device-resident tile batches, solver={args.solver})")
-    print(f"  compress   {total_mb / t_c:8.1f} MB/s  ({t_c * 1e3:.0f} ms)")
-    print(f"  decompress {total_mb / t_d:8.1f} MB/s  ({t_d * 1e3:.0f} ms)")
-    print(f"  ratio      {ratio:8.2f}x   traces {engine.device.trace_count()}")
-    print(f"  transfers  {tc.get('h2d_tiles', 0)} tile uploads / "
-          f"{tc.get('d2h_sections', 0)} stream downloads "
-          f"(one per compress group)")
+    def submit_retrying(fn, *a):
+        while True:
+            try:
+                return fn(*a)
+            except ServiceOverloaded as e:  # honor retry-after
+                time.sleep(e.retry_after)
 
-    # region-of-interest decode: the v2 tile index pays off
-    x = fields[0]
-    roi = tuple(slice(2, min(10, n)) for n in x.shape)
-    t0 = time.perf_counter()
-    sub = engine.decompress_roi(blobs[0], roi)
-    t_roi = time.perf_counter() - t0
-    assert sub.shape == tuple(s.stop - s.start for s in roi)
-    print(f"  ROI decode {str(tuple(f'{s.start}:{s.stop}' for s in roi))} "
-          f"in {t_roi * 1e3:.1f} ms")
+    def client(cid: int) -> dict:
+        # pipelined client: all compresses in flight at once, then the
+        # round-trip reads — several requests per client ride each batch
+        fields = _client_workload(cid, args.requests_per_client)
+        futs = [submit_retrying(svc.submit_compress, x, args.eb)
+                for x in fields]
+        blobs = [f.result() for f in futs]
+        dfuts = [submit_retrying(svc.submit_decompress, b) for b in blobs]
+        rfuts = [
+            submit_retrying(svc.submit_roi, b,
+                            tuple(slice(0, min(8, n)) for n in x.shape))
+            for x, b in zip(fields, blobs)
+        ]
+        for x, df in zip(fields, dfuts):
+            y = df.result()
+            bound = args.eb * (float(x.max()) - float(x.min()))
+            assert np.abs(x.astype(np.float64)
+                          - y.astype(np.float64)).max() <= bound
+        for x, rf in zip(fields, rfuts):
+            assert rf.result().shape == tuple(
+                min(8, n) for n in x.shape)
+        return {"mb": sum(x.nbytes for x in fields) / 1e6,
+                "fields": fields, "blobs": blobs}
+
+    with CompressionService(cfg) as svc:
+        # warm the program cache off the clock (one trace per bucket),
+        # so the measured run shows steady-state serving latency
+        warm = _client_workload(0, 2)
+        for b in [svc.submit_compress(x, args.eb) for x in warm]:
+            svc.submit_decompress(b.result()).result()
+        trace0 = engine.device.trace_count()
+        m0 = svc.metrics()
+
+        t0 = time.perf_counter()
+        with ThreadPoolExecutor(args.clients) as pool:
+            results = list(pool.map(client, range(args.clients)))
+        wall = time.perf_counter() - t0
+        m = svc.metrics()
+
+    # byte contract, verified OFF the clock: direct engine.compress
+    # calls would also pollute the per-batch transfer-counter deltas the
+    # metrics report if they ran concurrently with the service
+    for r in results:
+        for x, blob in zip(r["fields"], r["blobs"]):
+            assert blob == engine.compress(x, args.eb, plan=cfg.plan,
+                                           solver=cfg.solver)
+
+    total_mb = sum(r["mb"] for r in results)
+    n_req = m.completed - m0.completed
+    occ = ((m.mean_batch_occupancy * m.batches
+            - m0.mean_batch_occupancy * m0.batches)
+           / max(1, m.batches - m0.batches))
+    print(f"compression service: {args.clients} concurrent clients x "
+          f"{args.requests_per_client} fields (mixed 1/2/3-D f32/f64), "
+          f"solver={args.solver}")
+    print(f"  completed  {n_req} requests ({total_mb:.2f} MB compressed) "
+          f"in {wall:.2f}s wall")
+    print(f"  latency    p50 {m.p50_ms:.1f} ms / p99 {m.p99_ms:.1f} ms "
+          f"(window incl. warmup)")
+    print(f"  batching   {m.batches - m0.batches} micro-batches, "
+          f"occupancy mean {occ:.2f} / max {m.max_batch_occupancy}")
+    print(f"  traces     +{engine.device.trace_count() - trace0} after "
+          f"warmup (new (tile, capacity, dtype) buckets only; a warm "
+          f"shape mix adds 0)")
+    print(f"  transfers  {m.transfers}")
+    print(f"  rejections {m.rejected - m0.rejected} "
+          f"(backpressure, retried by clients)")
 
 
 def serve_llm(args):
@@ -153,14 +214,26 @@ def main():
     ap.add_argument("--kv-quant", action="store_true",
                     help="int8 KV cache (paper-technique quantization)")
     ap.add_argument("--compress-service", action="store_true",
-                    help="serve batched LOPC compression requests instead "
-                         "of an LLM")
+                    help="serve concurrent LOPC compression requests "
+                         "through the micro-batching service instead of "
+                         "an LLM")
     ap.add_argument("--eb", type=float, default=1e-2,
                     help="compression service: NOA error bound")
-    ap.add_argument("--tile", default=None,
+    ap.add_argument("--tile", default="16,16,64",
                     help="compression service: fixed tile shape t0,t1,t2 "
-                         "(default: auto per request)")
+                         "(the shape-stable production plan); pass "
+                         "'auto' for per-request auto tiling")
     ap.add_argument("--batch-tiles", type=int, default=8)
+    ap.add_argument("--clients", type=int, default=8,
+                    help="compression service: concurrent client threads")
+    ap.add_argument("--requests-per-client", type=int, default=6)
+    ap.add_argument("--max-delay-ms", type=float, default=5.0,
+                    help="coalescer deadline: how long a lone request "
+                         "waits for batch company")
+    ap.add_argument("--max-batch", type=int, default=64,
+                    help="coalescer size cap per micro-batch")
+    ap.add_argument("--max-queue", type=int, default=512,
+                    help="bounded queue depth (backpressure threshold)")
     ap.add_argument("--solver", default="auto",
                     choices=["auto", "jacobi", "frontier", "blockwise"],
                     help="compression service: subbin schedule (speed "

@@ -1,7 +1,7 @@
 """Unified model configuration covering all 10 assigned architectures."""
 from __future__ import annotations
 
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 from typing import Literal
 
 BlockKind = Literal["attn", "attn_local", "mamba2", "rwkv6"]

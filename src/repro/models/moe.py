@@ -72,14 +72,11 @@ def _local_moe(p, x_tokens, cfg, n_ep_shards: int, ep_axis: str | None):
     buf = buf.reshape(e, cap + 1, d)[:, :cap]
 
     if ep_axis is not None and n_ep_shards > 1:
-        e_loc = e // n_ep_shards
         # expert groups scatter to their EP shard; token slots from every
         # peer concatenate along the capacity axis:
-        # (e, cap, d) -> (e_loc, n_shards*cap, d)
+        # (e, cap, d) -> (e//n_ep_shards, n_shards*cap, d)
         buf = jax.lax.all_to_all(buf, ep_axis, split_axis=0, concat_axis=1,
                                  tiled=True)
-    else:
-        e_loc = e
 
     gate = jnp.einsum("ecd,edf->ecf", buf, p["w_gate"].astype(ct))
     up = jnp.einsum("ecd,edf->ecf", buf, p["w_up"].astype(ct))

@@ -13,7 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from ..models.config import ModelConfig
-from ..models.model import decode_step as _decode, init_cache, prefill as _prefill, train_loss
+from ..models.model import decode_step as _decode, prefill as _prefill, train_loss
 from ..optim.adamw import adamw_init, adamw_update
 from ..optim.schedules import cosine_schedule, wsd_schedule
 

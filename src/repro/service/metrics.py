@@ -1,0 +1,160 @@
+"""Service metrics: counters, latency percentiles, batch occupancy.
+
+The recorder is the single mutation point (every update holds one lock,
+so readings are consistent under concurrent clients), and ``snapshot``
+freezes it into a plain :class:`ServiceMetrics` for printing/JSON.
+
+Latency is recorded per *request* (submit -> future resolved, i.e. the
+full queue wait + coalesce delay + device batch), kept in a bounded
+window so a long-running server reports recent percentiles rather than
+lifetime ones.  Occupancy is recorded per *drained batch* (requests the
+coalescer flushed together) and per *device group* (requests sharing
+one ``compress_many``/``decompress_many`` device batch, via the
+engine's ``group_cb`` hook) — the second is the number that proves
+coalescing reaches the device, not just the queue.
+"""
+from __future__ import annotations
+
+import math
+import threading
+from collections import Counter, deque
+from dataclasses import dataclass, field
+
+
+def percentile(sorted_vals, q: float) -> float:
+    """Nearest-rank percentile of an already-sorted sequence (0 if empty)."""
+    if not sorted_vals:
+        return 0.0
+    rank = max(1, math.ceil(q / 100.0 * len(sorted_vals)))
+    return float(sorted_vals[rank - 1])
+
+
+@dataclass
+class ServiceMetrics:
+    """One frozen reading of the service counters."""
+
+    submitted: int = 0
+    completed: int = 0
+    failed: int = 0
+    rejected: int = 0
+    queue_depth: int = 0
+    batches: int = 0
+    mean_batch_occupancy: float = 0.0
+    max_batch_occupancy: int = 0
+    device_groups: int = 0
+    mean_device_group_occupancy: float = 0.0
+    p50_ms: float = 0.0
+    p99_ms: float = 0.0
+    mean_ms: float = 0.0
+    mbps: float = 0.0                     # payload MB / batch-busy second
+    per_kind: dict = field(default_factory=dict)
+    transfers: dict = field(default_factory=dict)
+
+    def lines(self) -> list[str]:
+        """Human-readable summary (one string per line)."""
+        return [
+            f"requests   {self.completed}/{self.submitted} completed, "
+            f"{self.rejected} rejected, {self.failed} failed "
+            f"(queue depth {self.queue_depth})",
+            f"latency    p50 {self.p50_ms:.1f} ms, p99 {self.p99_ms:.1f} ms, "
+            f"mean {self.mean_ms:.1f} ms",
+            f"batches    {self.batches} drained, occupancy mean "
+            f"{self.mean_batch_occupancy:.2f} / max {self.max_batch_occupancy}; "
+            f"{self.device_groups} device groups, "
+            f"{self.mean_device_group_occupancy:.2f} requests each",
+            f"throughput {self.mbps:.1f} MB/s busy; per kind {self.per_kind}",
+            f"transfers  {self.transfers}",
+        ]
+
+
+class MetricsRecorder:
+    """Thread-safe accumulator behind :class:`ServiceMetrics`."""
+
+    def __init__(self, latency_window: int = 4096):
+        self._lock = threading.Lock()
+        self._lat = deque(maxlen=latency_window)
+        self.submitted = 0
+        self.completed = 0
+        self.failed = 0
+        self.rejected = 0
+        self.batches = 0
+        self.occupancy_sum = 0
+        self.occupancy_max = 0
+        self.device_groups = 0
+        self.device_group_requests = 0
+        self.busy_seconds = 0.0
+        self.payload_bytes = 0
+        self.per_kind = Counter()
+        self.transfers = Counter()
+
+    def record_submit(self, kind: str) -> None:
+        with self._lock:
+            self.submitted += 1
+            self.per_kind[kind] += 1
+
+    def record_reject(self) -> None:
+        with self._lock:
+            self.rejected += 1
+
+    def record_done(self, latency_s: float, ok: bool) -> None:
+        with self._lock:
+            if ok:
+                self.completed += 1
+                self._lat.append(latency_s)
+            else:
+                self.failed += 1
+
+    def record_batch(self, n_requests: int, seconds: float,
+                     payload_bytes: int, transfers: dict) -> None:
+        with self._lock:
+            self.batches += 1
+            self.occupancy_sum += n_requests
+            self.occupancy_max = max(self.occupancy_max, n_requests)
+            self.busy_seconds += seconds
+            self.payload_bytes += payload_bytes
+            self.transfers.update(transfers)
+
+    def record_device_group(self, info: dict) -> None:
+        with self._lock:
+            self.device_groups += 1
+            self.device_group_requests += int(info["n_requests"])
+
+    def reset_window(self) -> None:
+        """Clear the latency window (load tests call this between load
+        points so percentiles describe one point, not the lifetime)."""
+        with self._lock:
+            self._lat.clear()
+
+    def mean_batch_seconds(self) -> float:
+        with self._lock:
+            return self.busy_seconds / self.batches if self.batches else 0.0
+
+    def snapshot(self, queue_depth: int = 0) -> ServiceMetrics:
+        with self._lock:
+            lat = sorted(self._lat)
+            return ServiceMetrics(
+                submitted=self.submitted,
+                completed=self.completed,
+                failed=self.failed,
+                rejected=self.rejected,
+                queue_depth=queue_depth,
+                batches=self.batches,
+                mean_batch_occupancy=(
+                    self.occupancy_sum / self.batches if self.batches else 0.0
+                ),
+                max_batch_occupancy=self.occupancy_max,
+                device_groups=self.device_groups,
+                mean_device_group_occupancy=(
+                    self.device_group_requests / self.device_groups
+                    if self.device_groups else 0.0
+                ),
+                p50_ms=percentile(lat, 50) * 1e3,
+                p99_ms=percentile(lat, 99) * 1e3,
+                mean_ms=(sum(lat) / len(lat) * 1e3 if lat else 0.0),
+                mbps=(
+                    self.payload_bytes / 1e6 / self.busy_seconds
+                    if self.busy_seconds else 0.0
+                ),
+                per_kind=dict(self.per_kind),
+                transfers=dict(self.transfers),
+            )

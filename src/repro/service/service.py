@@ -1,0 +1,417 @@
+"""Async micro-batching compression service over the engine.
+
+The engine (``engine.compress_many``/``decompress_many``) coalesces any
+mix of requests it is *handed in one call* into shared device-resident
+tile batches — but something has to hand it concurrent traffic.  This
+module is that something: a bounded request queue, a worker thread, and
+a deadline/size coalescer that drains whatever concurrent clients have
+submitted into micro-batches, so independent requests arriving within a
+few milliseconds of each other ride the same device programs.
+
+Dataflow (one worker, clients on any thread or event loop):
+
+  submit            client calls ``submit_compress``/``submit_decompress``/
+                    ``submit_roi`` -> a Future; the request enters the
+                    bounded queue, or is rejected with
+                    :class:`ServiceOverloaded` (backpressure: the queue
+                    never grows past ``max_queue``, and the rejection
+                    carries a ``retry_after`` estimated from recent
+                    batch times)
+  coalesce          the worker blocks for the first request, then keeps
+                    draining until ``max_delay_ms`` after that request's
+                    arrival or ``max_batch_requests``, whichever first —
+                    the classic deadline/size micro-batching rule
+  execute           the drained batch partitions into engine calls:
+                    compress requests group by (mode, preserve_order)
+                    into ``compress_many`` calls, decompress requests
+                    into one ``decompress_many``, ROI reads run per
+                    request; the engine then does its own
+                    (tile_shape, dtype, width) device grouping and
+                    reports it back through the ``group_cb`` hook
+  resolve           each request's Future gets its result; per-request
+                    latency (submit -> resolve) feeds the metrics
+
+Everything runs against ONE ``CompressionPlan`` and solver, so the
+executor/program cache (``engine.executor.default_executor`` +
+``device``'s jitted stage programs) is keyed once and steady-state
+traffic never retraces — the trace-count probe asserts this in tests.
+
+Byte contract: a request compressed through the service yields the
+*exact same container bytes* as a direct ``engine.compress`` call with
+the same plan/solver, whatever else it was batched with (the bins
+section width is part of the engine's group key, so neighbors cannot
+widen it; tested).
+
+The service is thread-based (clients block on Futures; an ``asyncio``
+client awaits the same Futures via :meth:`CompressionService.acompress`
+etc.) because the execute stage is device-bound, not IO-bound — one
+worker thread saturates the device while the GIL is released inside
+XLA, and N event-loop tasks would still have to serialize there.
+"""
+from __future__ import annotations
+
+import asyncio
+import queue
+import threading
+import time
+from concurrent.futures import Future
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from .. import engine
+from ..engine import executor as engine_executor
+from ..engine.plan import CompressionPlan
+from .metrics import MetricsRecorder, ServiceMetrics
+
+_MIN_RETRY_AFTER = 0.002
+
+
+class ServiceOverloaded(RuntimeError):
+    """Backpressure rejection: the bounded queue is full.
+
+    ``retry_after`` (seconds) estimates when capacity frees up, from the
+    current depth and the recent mean batch execution time — the value a
+    fronting HTTP layer would surface as ``Retry-After``.
+    """
+
+    def __init__(self, retry_after: float):
+        super().__init__(
+            f"compression service queue is full; retry in {retry_after:.3f}s"
+        )
+        self.retry_after = retry_after
+
+
+@dataclass(frozen=True)
+class ServiceConfig:
+    """Service tuning knobs.
+
+    ``plan``/``solver`` pin the one engine configuration every request
+    shares (the keyed program cache); ``max_delay_ms`` is the most a
+    lone request waits for company (latency floor under light load);
+    ``max_batch_requests`` caps a drained batch (latency ceiling under
+    heavy load); ``max_queue`` bounds memory and is the backpressure
+    threshold.
+    """
+
+    plan: CompressionPlan = field(default_factory=CompressionPlan)
+    solver: str = "auto"
+    max_batch_requests: int = 64
+    max_delay_ms: float = 2.0
+    max_queue: int = 512
+    latency_window: int = 4096
+
+    def __post_init__(self):
+        if self.max_batch_requests < 1:
+            raise ValueError("max_batch_requests must be >= 1")
+        if self.max_delay_ms < 0:
+            raise ValueError("max_delay_ms must be >= 0")
+        if self.max_queue < 1:
+            raise ValueError("max_queue must be >= 1")
+
+
+class _Pending:
+    """One queued request: what to run + the Future to resolve."""
+
+    __slots__ = ("kind", "args", "future", "t_submit", "nbytes")
+
+    def __init__(self, kind: str, args: tuple, nbytes: int):
+        self.kind = kind
+        self.args = args
+        self.future: Future = Future()
+        self.t_submit = time.monotonic()
+        self.nbytes = nbytes
+
+
+class CompressionService:
+    """Micro-batching front of the compression engine.
+
+    Use as a context manager (``with CompressionService() as svc:``) or
+    call :meth:`start`/:meth:`stop`.  ``autostart=False`` builds the
+    service without its worker (tests use this to inspect queue
+    behavior deterministically).
+    """
+
+    def __init__(self, config: ServiceConfig | None = None, *,
+                 autostart: bool = True):
+        self.config = config or ServiceConfig()
+        self.metrics_recorder = MetricsRecorder(self.config.latency_window)
+        self._queue: queue.Queue[_Pending] = queue.Queue(self.config.max_queue)
+        self._stop = threading.Event()
+        self._discard = threading.Event()  # stop(drain=False): shed backlog
+        self._worker: threading.Thread | None = None
+        if autostart:
+            self.start()
+
+    # ------------------------------------------------------------ lifecycle
+
+    def start(self) -> None:
+        if self._worker is not None and self._worker.is_alive():
+            return
+        self._stop.clear()
+        self._discard.clear()
+        self._worker = threading.Thread(
+            target=self._run, name="lopc-service-worker", daemon=True
+        )
+        self._worker.start()
+
+    def stop(self, drain: bool = True) -> None:
+        """Stop the worker.  ``drain=True`` (default) finishes everything
+        already queued first; ``drain=False`` cancels queued requests
+        (the batch already executing, if any, still completes)."""
+        if not drain:
+            self._discard.set()  # worker cancels drained batches from now
+        self._stop.set()
+        if self._worker is not None:
+            self._worker.join()
+            self._worker = None
+        # loop: a submit racing the stop flag may still slip one request
+        # into the queue after the first drain
+        while True:
+            leftovers = self._drain_now()
+            if not leftovers:
+                break
+            if drain:
+                self._execute_batch(leftovers)
+            else:
+                for p in leftovers:
+                    p.future.cancel()
+
+    def __enter__(self) -> "CompressionService":
+        self.start()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    # --------------------------------------------------------------- submit
+
+    def submit_compress(self, x, eb, mode: str = "noa",
+                        preserve_order: bool = True) -> Future:
+        """Queue one field for compression -> Future[bytes]."""
+        x = np.asarray(x)
+        return self._submit(_Pending(
+            "compress", (x, float(eb), mode, bool(preserve_order)), x.nbytes
+        ))
+
+    def submit_decompress(self, blob: bytes) -> Future:
+        """Queue one container for full decode -> Future[np.ndarray]."""
+        return self._submit(_Pending("decompress", (blob,), len(blob)))
+
+    def submit_roi(self, blob: bytes, region: tuple) -> Future:
+        """Queue a region-of-interest decode -> Future[np.ndarray]."""
+        return self._submit(_Pending("roi", (blob, tuple(region)), len(blob)))
+
+    # Blocking conveniences -------------------------------------------------
+
+    def compress(self, x, eb, mode: str = "noa",
+                 preserve_order: bool = True) -> bytes:
+        return self.submit_compress(x, eb, mode, preserve_order).result()
+
+    def decompress(self, blob: bytes) -> np.ndarray:
+        return self.submit_decompress(blob).result()
+
+    def decompress_roi(self, blob: bytes, region: tuple) -> np.ndarray:
+        return self.submit_roi(blob, region).result()
+
+    # Asyncio conveniences --------------------------------------------------
+
+    async def acompress(self, x, eb, mode: str = "noa",
+                        preserve_order: bool = True) -> bytes:
+        return await asyncio.wrap_future(
+            self.submit_compress(x, eb, mode, preserve_order)
+        )
+
+    async def adecompress(self, blob: bytes) -> np.ndarray:
+        return await asyncio.wrap_future(self.submit_decompress(blob))
+
+    async def adecompress_roi(self, blob: bytes, region: tuple) -> np.ndarray:
+        return await asyncio.wrap_future(self.submit_roi(blob, region))
+
+    # -------------------------------------------------------------- metrics
+
+    def metrics(self) -> ServiceMetrics:
+        return self.metrics_recorder.snapshot(self._queue.qsize())
+
+    def retry_after(self) -> float:
+        """Seconds until queued work likely drains one batch's worth."""
+        batches_ahead = max(
+            1, -(-self._queue.qsize() // self.config.max_batch_requests)
+        )
+        est = batches_ahead * self.metrics_recorder.mean_batch_seconds()
+        return max(_MIN_RETRY_AFTER, est)
+
+    # ------------------------------------------------------------- internals
+
+    def _submit(self, p: _Pending) -> Future:
+        if self._stop.is_set():
+            # after stop() nothing will ever drain the queue — fail loud
+            # instead of returning a Future that can never resolve
+            # (autostart=False services haven't stopped: their queue is
+            # drained by the eventual start())
+            raise RuntimeError("compression service is stopped")
+        try:
+            self._queue.put_nowait(p)
+        except queue.Full:
+            self.metrics_recorder.record_reject()
+            raise ServiceOverloaded(self.retry_after()) from None
+        if self._stop.is_set() and self._worker is None:
+            # raced a concurrent stop(): its drain loop may already have
+            # seen an empty queue, so finish the straggler here on the
+            # submitting thread rather than strand its Future
+            leftovers = self._drain_now()
+            if leftovers:
+                self._execute_batch(leftovers)
+        self.metrics_recorder.record_submit(p.kind)
+        return p.future
+
+    def _drain_now(self) -> list[_Pending]:
+        out = []
+        while True:
+            try:
+                out.append(self._queue.get_nowait())
+            except queue.Empty:
+                return out
+
+    def _run(self) -> None:
+        cfg = self.config
+        while True:
+            try:
+                first = self._queue.get(timeout=0.05)
+            except queue.Empty:
+                if self._stop.is_set():
+                    return
+                continue
+            batch = [first]
+            # greedy pass: whatever already queued up while the previous
+            # batch executed joins immediately (the backlog case — the
+            # deadline below may be long expired for these)
+            while len(batch) < cfg.max_batch_requests:
+                try:
+                    batch.append(self._queue.get_nowait())
+                except queue.Empty:
+                    break
+            # deadline pass: wait out the rest of the oldest request's
+            # delay budget for stragglers (the light-load case)
+            deadline = first.t_submit + cfg.max_delay_ms / 1e3
+            while len(batch) < cfg.max_batch_requests:
+                timeout = deadline - time.monotonic()
+                if timeout <= 0:
+                    break
+                try:
+                    batch.append(self._queue.get(timeout=timeout))
+                except queue.Empty:
+                    break
+            if self._discard.is_set():  # stop(drain=False): shed backlog
+                for p in batch:
+                    p.future.cancel()
+                continue
+            try:
+                self._execute_batch(batch)
+            except BaseException as e:  # noqa: BLE001 - worker must survive
+                # _execute_batch isolates request errors into Futures;
+                # anything escaping is a harness bug — fail the batch's
+                # still-pending Futures rather than dying silently
+                for p in batch:
+                    if not p.future.done():
+                        try:
+                            p.future.set_exception(e)
+                        except Exception:  # noqa: BLE001, S110
+                            pass
+
+    def _execute_batch(self, batch: list[_Pending]) -> None:
+        """Run one drained micro-batch through the engine."""
+        # claim every Future up front: a client that cancelled while its
+        # request was queued simply drops out of the batch (and can no
+        # longer cancel once we are running), so a cancellation can
+        # never wedge the worker or its batch-mates
+        batch = [p for p in batch
+                 if p.future.set_running_or_notify_cancel()]
+        if not batch:
+            return
+        rec = self.metrics_recorder
+        t0 = time.monotonic()
+        tc0 = dict(engine_executor.TRANSFER_COUNTS)
+
+        # compress requests sharing (mode, preserve_order) share one
+        # compress_many call; the engine sub-groups by device signature
+        comp_groups: dict[tuple, list[_Pending]] = {}
+        dec_items: list[_Pending] = []
+        roi_items: list[_Pending] = []
+        for p in batch:
+            if p.kind == "compress":
+                comp_groups.setdefault(p.args[2:], []).append(p)
+            elif p.kind == "decompress":
+                dec_items.append(p)
+            else:
+                roi_items.append(p)
+
+        for (mode, order), members in comp_groups.items():
+            self._run_many(
+                members,
+                lambda ms, cb: engine.compress_many(
+                    [p.args[0] for p in ms], [p.args[1] for p in ms], mode,
+                    order, self.config.solver, self.config.plan,
+                    group_cb=cb,
+                ),
+            )
+        if dec_items:
+            self._run_many(
+                dec_items,
+                lambda ms, cb: engine.decompress_many(
+                    [p.args[0] for p in ms], plan=self.config.plan,
+                    group_cb=cb,
+                ),
+            )
+        for p in roi_items:
+            try:
+                out = engine.decompress_roi(p.args[0], p.args[1],
+                                            plan=self.config.plan)
+            except Exception as e:  # noqa: BLE001 - resolved into the Future
+                self._resolve(p, error=e)
+            else:
+                self._resolve(p, result=out)
+
+        tc1 = engine_executor.TRANSFER_COUNTS
+        rec.record_batch(
+            len(batch), time.monotonic() - t0,
+            sum(p.nbytes for p in batch),
+            {k: tc1[k] - tc0.get(k, 0) for k in tc1 if tc1[k] - tc0.get(k, 0)},
+        )
+
+    def _run_many(self, members: list[_Pending], fn) -> None:
+        """Run one engine call (``fn(members, group_cb)``) over
+        ``members``; on failure, isolate the poison request by retrying
+        each member alone so one bad field (wrong dtype, corrupt blob)
+        cannot fail its batch neighbors.  Device-group reports buffer
+        locally and only reach the metrics when their call succeeded —
+        an aborted batched attempt must not inflate occupancy."""
+        rec = self.metrics_recorder
+        infos: list[dict] = []
+        try:
+            results = fn(members, infos.append)
+        except Exception:  # noqa: BLE001 - per-member retry assigns blame
+            for p in members:
+                one: list[dict] = []
+                try:
+                    out = fn([p], one.append)
+                except Exception as e:  # noqa: BLE001
+                    self._resolve(p, error=e)
+                else:
+                    for info in one:
+                        rec.record_device_group(info)
+                    self._resolve(p, result=out[0])
+        else:
+            for info in infos:
+                rec.record_device_group(info)
+            for p, out in zip(members, results):
+                self._resolve(p, result=out)
+
+    def _resolve(self, p: _Pending, result=None, error=None) -> None:
+        latency = time.monotonic() - p.t_submit
+        if error is not None:
+            self.metrics_recorder.record_done(latency, ok=False)
+            p.future.set_exception(error)
+        else:
+            self.metrics_recorder.record_done(latency, ok=True)
+            p.future.set_result(result)

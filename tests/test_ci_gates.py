@@ -1,0 +1,128 @@
+"""The CI quality gates, tested as code:
+
+``benchmarks/check_regression.py`` must fail on an injected compression
+-ratio drop or transfer-count increase and pass on clean/noisy-but-
+in-tolerance output; ``benchmarks/check_determinism.py``'s manifest
+comparison must catch hash drift.  The gates guard the repo, so the
+gates themselves get unit tests — a gate that silently passes
+everything is worse than no gate.
+"""
+from __future__ import annotations
+
+import copy
+import json
+
+import pytest
+
+from benchmarks.check_determinism import compare
+from benchmarks.check_regression import RATIO_TOL, check, extract_baseline, main
+
+
+def _bench():
+    return {
+        "eb": 0.01,
+        "mode": "noa",
+        "tile_shape": [16, 16, 64],
+        "fields": {
+            "miranda": {
+                "engine": {"ratio": 11.125, "compress_mbps": 5.0},
+                "transfers_per_compress": {
+                    "h2d_tiles": 1.0, "h2d_aux": 3.0,
+                    "d2h_aux": 1.0, "d2h_sections": 1.0,
+                },
+            },
+            "isabel": {
+                "engine": {"ratio": 5.039, "compress_mbps": 20.0},
+                "transfers_per_compress": {
+                    "h2d_tiles": 1.0, "h2d_aux": 3.0,
+                    "d2h_aux": 1.0, "d2h_sections": 1.0,
+                },
+            },
+        },
+    }
+
+
+def test_clean_bench_passes():
+    bench = _bench()
+    assert check(extract_baseline(bench), bench) == []
+
+
+def test_ratio_within_tolerance_passes():
+    bench = _bench()
+    baseline = extract_baseline(bench)
+    bench["fields"]["miranda"]["engine"]["ratio"] *= 1 - RATIO_TOL / 2
+    assert check(baseline, bench) == []
+
+
+def test_injected_ratio_regression_fails():
+    bench = _bench()
+    baseline = extract_baseline(bench)
+    bench["fields"]["miranda"]["engine"]["ratio"] *= 0.97  # 3% drop
+    problems = check(baseline, bench)
+    assert len(problems) == 1 and "miranda" in problems[0]
+    assert "ratio" in problems[0]
+
+
+def test_ratio_improvement_passes():
+    bench = _bench()
+    baseline = extract_baseline(bench)
+    bench["fields"]["miranda"]["engine"]["ratio"] *= 1.5
+    assert check(baseline, bench) == []
+
+
+def test_transfer_count_increase_fails():
+    bench = _bench()
+    baseline = extract_baseline(bench)
+    bench["fields"]["isabel"]["transfers_per_compress"]["h2d_tiles"] = 2.0
+    problems = check(baseline, bench)
+    assert len(problems) == 1 and "h2d_tiles" in problems[0]
+
+
+def test_missing_field_fails():
+    bench = _bench()
+    baseline = extract_baseline(bench)
+    del bench["fields"]["isabel"]
+    assert any("missing" in p for p in check(baseline, bench))
+
+
+def test_config_drift_fails():
+    bench = _bench()
+    baseline = extract_baseline(bench)
+    drifted = copy.deepcopy(bench)
+    drifted["eb"] = 1e-4
+    assert any("config drifted" in p for p in check(baseline, drifted))
+
+
+def test_gate_cli_end_to_end(tmp_path):
+    bench_p = tmp_path / "bench.json"
+    base_p = tmp_path / "baseline.json"
+    bench = _bench()
+    bench_p.write_text(json.dumps(bench))
+    # bootstrap the baseline from a clean run, then gate against it
+    assert main(["--bench", str(bench_p), "--baseline", str(base_p),
+                 "--update-baseline"]) == 0
+    assert main(["--bench", str(bench_p), "--baseline", str(base_p)]) == 0
+    bench["fields"]["miranda"]["engine"]["ratio"] *= 0.9
+    bench_p.write_text(json.dumps(bench))
+    assert main(["--bench", str(bench_p), "--baseline", str(base_p)]) == 1
+
+
+@pytest.mark.parametrize("mutate,expect", [
+    (lambda h: h, []),
+    (lambda h: {**h, "a": "1" * 64},
+     ["a: container hash"]),
+    (lambda h: {k: v for k, v in h.items() if k != "a"},
+     ["a: case missing"]),
+])
+def test_determinism_manifest_compare(mutate, expect):
+    manifest = {"a": "0" * 64, "b": "f" * 64}
+    problems = compare(manifest, mutate(dict(manifest)))
+    assert len(problems) == len(expect)
+    for p, want in zip(sorted(problems), sorted(expect)):
+        assert p.startswith(want)
+
+
+def test_determinism_new_case_flagged():
+    manifest = {"a": "0" * 64}
+    problems = compare(manifest, {"a": "0" * 64, "new": "1" * 64})
+    assert problems == ["new: not in manifest (run --update-manifest)"]

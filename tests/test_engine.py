@@ -17,7 +17,7 @@ import numpy as np
 import pytest
 
 from repro import engine
-from repro.core import compress, decompress
+from repro.core import bitstream, compress, decompress
 from repro.data.fields import FIELD_GENERATORS, make_scientific_field
 from repro.engine import device
 from repro.engine.plan import CompressionPlan, tiles_for_region
@@ -101,6 +101,28 @@ def test_compress_many_deterministic(rng):
     # batching must not change bytes: one-at-a-time == coalesced
     singles = [engine.compress(x, 1e-2) for x in fields]
     assert a == singles
+
+
+def test_batching_byte_transparent_across_section_widths(rng):
+    """A narrow-valued field batched with a wide-valued neighbor must
+    keep its own (int16) bins width — the stored width is part of the
+    compress group key, so the service's coalescing can never change a
+    request's bytes (PR-3 byte contract)."""
+    narrow = rng.standard_normal((12, 11, 10))            # |bin| ~ 50
+    wide = rng.standard_normal((12, 11, 10)) * 1e4        # beyond int16
+    ebs = [1e-2, 1e-4]
+    batched = engine.compress_many([narrow, wide], ebs, "abs")
+    singles = [engine.compress(narrow, 1e-2, "abs"),
+               engine.compress(wide, 1e-4, "abs")]
+    assert batched == singles
+    words = [bitstream.read_container_v2(b).stream_words()[0]
+             for b in batched]
+    assert words[0] == 2 and words[1] >= 4  # widths really did differ
+    for x, eb, b in zip([narrow, wide], ebs, batched):
+        assert np.array_equal(
+            engine.decompress(b),
+            decompress(compress(x, eb, "abs", container_version=1)),
+        )
 
 
 def test_roi_decode_matches_full(rng):

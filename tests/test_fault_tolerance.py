@@ -21,10 +21,6 @@ from repro.checkpoint.manager import (
     restore_tree,
     save_tree,
 )
-from repro.distributed.compression import (
-    init_error_feedback,
-    make_error_feedback_compressor,
-)
 from repro.models import get_arch
 from repro.models.config import reduced_for_smoke
 from repro.runtime.trainer import Trainer, TrainerConfig

@@ -7,14 +7,13 @@ from __future__ import annotations
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis import given, strategies as st
 
 from repro.core.quantize import effective_eps
 from repro.core.subbin import solve_subbins
 from repro.core.quantize import quantize as quantize_f64
 from repro.kernels import ops, ref
 from repro.kernels.ref import (
-    FF32_MAX_BIN,
     dequantize_ff32_ref,
     quantize_ff32_ref,
     rze_bitmap_ref,

@@ -1,0 +1,241 @@
+"""Service-layer acceptance (PR-3 contract):
+
+1. Coalescing: concurrent mixed-shape/dtype requests drain into shared
+   micro-batches (occupancy > 1) and into shared engine device groups.
+2. Byte contract: every container produced through the service is
+   byte-identical to a direct ``engine.compress`` with the same
+   plan/solver — batching is scheduling, never a different compressor.
+3. Backpressure: the bounded queue rejects with ``ServiceOverloaded``
+   carrying a positive retry-after, and the rejection is counted.
+4. Steady state never retraces: warm traffic re-runs add zero entries
+   to the device trace counter.
+5. Error isolation: a poison request fails its own Future only.
+
+Tests queue requests against a stopped worker and then start it, so
+batch composition (and therefore occupancy and trace buckets) is
+deterministic rather than scheduling-dependent.
+"""
+from __future__ import annotations
+
+import asyncio
+
+import numpy as np
+import pytest
+
+from repro import engine
+from repro.engine import device
+from repro.engine.plan import CompressionPlan
+from repro.service import (
+    CompressionService,
+    ServiceConfig,
+    ServiceOverloaded,
+    percentile,
+)
+
+PLAN = CompressionPlan(tile_shape=(8, 8, 8), batch_tiles=4)
+CFG = ServiceConfig(plan=PLAN, solver="auto", max_delay_ms=25.0,
+                    max_batch_requests=64, max_queue=64)
+
+
+def _mixed_fields(rng, n=6):
+    shapes = [(8, 8, 8), (7, 9, 8), (12, 10), (120,)]
+    return [
+        rng.standard_normal(shapes[i % len(shapes)]).astype(
+            np.float64 if i % 2 else np.float32
+        )
+        for i in range(n)
+    ]
+
+
+def _queue_then_start(svc, submits):
+    """Deterministic batch: enqueue everything, then start the worker."""
+    futs = [fn(*args) for fn, *args in submits]
+    svc.start()
+    results = []
+    for f in futs:
+        results.append(f.result(timeout=300))
+    return results
+
+
+def test_concurrent_mixed_requests_coalesce_byte_identical(rng):
+    fields = _mixed_fields(rng)
+    svc = CompressionService(CFG, autostart=False)
+    try:
+        blobs = _queue_then_start(
+            svc, [(svc.submit_compress, x, 1e-2) for x in fields]
+        )
+        m = svc.metrics()
+        # all requests were queued before the worker existed -> one batch
+        assert m.mean_batch_occupancy > 1
+        assert m.max_batch_occupancy == len(fields)
+        # several requests shared each engine device group
+        assert m.device_groups < len(fields)
+        # the byte contract: service == direct engine call, bit for bit
+        for x, b in zip(fields, blobs):
+            assert b == engine.compress(x, 1e-2, plan=PLAN)
+    finally:
+        svc.stop()
+
+
+def test_decompress_and_roi_round_trip(rng):
+    fields = _mixed_fields(rng, n=4)
+    with CompressionService(CFG) as svc:
+        blobs = [svc.submit_compress(x, 1e-2) for x in fields]
+        blobs = [f.result() for f in blobs]
+        outs = [f.result() for f in [svc.submit_decompress(b) for b in blobs]]
+        for x, y, b in zip(fields, outs, blobs):
+            assert y.shape == x.shape and y.dtype == x.dtype
+            assert np.array_equal(y, engine.decompress(b, plan=PLAN))
+        roi = (slice(1, 5), slice(2, 7), slice(0, 8))
+        sub = svc.submit_roi(blobs[0], roi).result()
+        assert np.array_equal(sub, engine.decompress(blobs[0], plan=PLAN)[roi])
+        m = svc.metrics()
+        assert m.completed == 9 and m.failed == 0
+        assert m.per_kind == {"compress": 4, "decompress": 4, "roi": 1}
+
+
+def test_backpressure_rejects_with_retry_after(rng):
+    cfg = ServiceConfig(plan=PLAN, max_queue=2)
+    svc = CompressionService(cfg, autostart=False)
+    x = rng.standard_normal((8, 8, 8))
+    f1 = svc.submit_compress(x, 1e-2)
+    f2 = svc.submit_compress(x, 1e-2)
+    with pytest.raises(ServiceOverloaded) as ei:
+        svc.submit_compress(x, 1e-2)
+    assert ei.value.retry_after > 0
+    assert svc.metrics().rejected == 1
+    assert svc.metrics().queue_depth == 2
+    svc.stop()  # drains the two queued requests on shutdown
+    assert f1.result() == f2.result() == engine.compress(x, 1e-2, plan=PLAN)
+
+
+def test_steady_state_adds_zero_traces(rng):
+    """Identical traffic replayed through fresh service instances must
+    hit only warm device programs (the executor + program caches are
+    keyed by (plan, solver), shared across services)."""
+    fields = _mixed_fields(rng)
+
+    def one_pass():
+        svc = CompressionService(CFG, autostart=False)
+        blobs = _queue_then_start(
+            svc, [(svc.submit_compress, x, 1e-2) for x in fields]
+        )
+        svc.stop()
+        svc2 = CompressionService(CFG, autostart=False)
+        outs = _queue_then_start(
+            svc2, [(svc2.submit_decompress, b) for b in blobs]
+        )
+        svc2.stop()
+        return blobs, outs
+
+    blobs, _ = one_pass()  # warm every bucket this traffic needs
+    snapshot = dict(device.TRACE_COUNTS)
+    for _ in range(2):  # identical traffic must hit only warm programs
+        blobs2, outs = one_pass()
+        assert blobs2 == blobs
+        for x, y in zip(fields, outs):
+            assert np.abs(x - y).max() <= 1e-2 * (
+                float(x.max()) - float(x.min())
+            )
+    assert dict(device.TRACE_COUNTS) == snapshot, \
+        "steady-state service traffic retraced a device program"
+
+
+def test_poison_request_fails_alone(rng):
+    good = rng.standard_normal((8, 8, 8))
+    bad = np.arange(512, dtype=np.int32).reshape(8, 8, 8)  # not a float field
+    svc = CompressionService(CFG, autostart=False)
+    try:
+        fg = svc.submit_compress(good, 1e-2)
+        fb = svc.submit_compress(bad, 1e-2)
+        fz = svc.submit_decompress(b"not a container")
+        svc.start()
+        assert fg.result(timeout=300) == engine.compress(good, 1e-2, plan=PLAN)
+        with pytest.raises(ValueError):
+            fb.result(timeout=300)
+        with pytest.raises(ValueError):
+            fz.result(timeout=300)
+        m = svc.metrics()
+        assert m.failed == 2 and m.completed == 1
+        # the aborted batched attempt must not inflate device-group
+        # occupancy: only the good request's successful retry reports
+        assert m.device_groups == 1
+        assert m.mean_device_group_occupancy == 1.0
+    finally:
+        svc.stop()
+
+
+def test_stop_without_drain_cancels_backlog(rng):
+    x = rng.standard_normal((8, 8, 8))
+    svc = CompressionService(CFG, autostart=False)
+    futs = [svc.submit_compress(x, 1e-2) for _ in range(3)]
+    svc.stop(drain=False)
+    assert all(f.cancelled() for f in futs)
+
+
+def test_cancelled_future_cannot_wedge_the_worker(rng):
+    """A client abandoning its queued request (Future.cancel) must drop
+    out of the batch without harming batch-mates or the worker."""
+    x = rng.standard_normal((8, 8, 8))
+    svc = CompressionService(CFG, autostart=False)
+    try:
+        f_cancel = svc.submit_compress(x, 1e-2)
+        f_keep = svc.submit_compress(x, 1e-2)
+        assert f_cancel.cancel()
+        svc.start()
+        assert f_keep.result(timeout=300) == engine.compress(x, 1e-2,
+                                                             plan=PLAN)
+        # the worker survived: a fresh request still completes
+        assert svc.submit_compress(x, 1e-2).result(timeout=300) == \
+            f_keep.result()
+    finally:
+        svc.stop()
+
+
+def test_submit_after_stop_raises():
+    svc = CompressionService(CFG)
+    svc.stop()
+    with pytest.raises(RuntimeError, match="stopped"):
+        svc.submit_compress(np.zeros((8, 8, 8)), 1e-2)
+    # restartable: start() clears the stopped state
+    svc.start()
+    x = np.linspace(0, 1, 512).reshape(8, 8, 8)
+    assert svc.compress(x, 1e-2) == engine.compress(x, 1e-2, plan=PLAN)
+    svc.stop()
+
+
+def test_asyncio_facade(rng):
+    fields = _mixed_fields(rng, n=3)
+
+    async def go(svc):
+        blobs = await asyncio.gather(
+            *[svc.acompress(x, 1e-2) for x in fields]
+        )
+        outs = await asyncio.gather(
+            *[svc.adecompress(b) for b in blobs]
+        )
+        return blobs, outs
+
+    with CompressionService(CFG) as svc:
+        blobs, outs = asyncio.run(go(svc))
+    for x, b, y in zip(fields, blobs, outs):
+        assert b == engine.compress(x, 1e-2, plan=PLAN)
+        assert np.abs(x - y).max() <= 1e-2 * (float(x.max()) - float(x.min()))
+
+
+def test_percentile_nearest_rank():
+    assert percentile([], 99) == 0.0
+    assert percentile([5.0], 50) == 5.0
+    vals = sorted(float(v) for v in range(1, 101))
+    assert percentile(vals, 50) == 50.0
+    assert percentile(vals, 99) == 99.0
+    assert percentile(vals, 100) == 100.0
+
+
+def test_config_validation():
+    with pytest.raises(ValueError):
+        ServiceConfig(max_batch_requests=0)
+    with pytest.raises(ValueError):
+        ServiceConfig(max_delay_ms=-1)
+    with pytest.raises(ValueError):
+        ServiceConfig(max_queue=0)
