@@ -40,11 +40,24 @@ EB = 1e-2
 SHAPES = ((13, 11, 9), (40, 28), (500,))
 DTYPES = ("float32", "float64")
 
+# Temporal chain cases: every evolution x two bases, both dtypes, a
+# mid-chain keyframe (interval 2 over 5 frames) so both frame kinds and
+# the residual-run replay are pinned.
+CHAIN_SHAPE = (13, 11, 9)
+CHAIN_FRAMES = 5
+CHAIN_INTERVAL = 2
+CHAIN_BASES = ("gaussians", "turbulence")
+
 
 def compute_hashes() -> tuple[dict, list[str]]:
     """-> ({case: sha256}, [cross-solver violations])."""
-    from repro import engine
-    from repro.data.fields import FIELD_GENERATORS, make_scientific_field
+    from repro import engine, temporal
+    from repro.data.fields import (
+        FIELD_GENERATORS,
+        SEQUENCE_EVOLUTIONS,
+        make_field_sequence,
+        make_scientific_field,
+    )
 
     hashes = {}
     problems = []
@@ -70,6 +83,38 @@ def compute_hashes() -> tuple[dict, list[str]]:
                         f"{case}: round-trip error {err:.3e} exceeds "
                         f"bound {bound:.3e}"
                     )
+                hashes[case] = hashlib.sha256(ref).hexdigest()
+
+    for evo in sorted(SEQUENCE_EVOLUTIONS):
+        for base in CHAIN_BASES:
+            for dtype in DTYPES:
+                frames = make_field_sequence(evo, base, CHAIN_SHAPE,
+                                             CHAIN_FRAMES, np.dtype(dtype),
+                                             seed=5)
+                case = f"chain/{evo}/{base}/{dtype}"
+                blobs = {
+                    s: temporal.compress_chain(
+                        frames, EB, solver=s,
+                        keyframe_interval=CHAIN_INTERVAL)
+                    for s in SOLVERS
+                }
+                ref = blobs[SOLVERS[0]]
+                for s, b in blobs.items():
+                    if b != ref:
+                        problems.append(
+                            f"{case}: solver {s} bytes differ from "
+                            f"{SOLVERS[0]} (schedule independence broken)"
+                        )
+                decoded = temporal.decompress_chain(ref)
+                for t, f in enumerate(frames):
+                    bound = EB * (float(f.max()) - float(f.min()))
+                    err = float(np.abs(f.astype(np.float64)
+                                       - decoded[t].astype(np.float64)).max())
+                    if err > bound:
+                        problems.append(
+                            f"{case}: frame {t} round-trip error {err:.3e} "
+                            f"exceeds bound {bound:.3e}"
+                        )
                 hashes[case] = hashlib.sha256(ref).hexdigest()
     return hashes, problems
 

@@ -12,11 +12,20 @@ Compares a fresh ``BENCH_engine.json`` against the committed baseline
     crossing is an architectural regression even when MB/s happens to
     look fine on the runner.
 
+``--temporal`` instead gates a fresh ``BENCH_temporal.json`` against
+``benchmarks/baselines/temporal_baseline.json``: every sequence's
+``temporal_win`` (snapshot bytes / chain bytes) must stay within
+``--ratio-tol`` of its committed value, and the sequences the baseline
+marks as gating must beat the committed floor outright — the standing
+claim that chains beat per-frame snapshot compression on
+time-correlated data by a real margin, not a rounding error.
+
 Throughput numbers are deliberately NOT gated: CI machines are shared
 and MB/s is noise there; the bench still records it for trajectory.
 
   PYTHONPATH=src python -m benchmarks.check_regression
   PYTHONPATH=src python -m benchmarks.check_regression --update-baseline
+  PYTHONPATH=src python -m benchmarks.check_regression --temporal
 
 ``--update-baseline`` rewrites the baseline from the current bench
 output (run after an intentional ratio/transfer change, commit the
@@ -33,8 +42,19 @@ BENCH_PATH = Path(__file__).resolve().parent / "results" / "BENCH_engine.json"
 BASELINE_PATH = (
     Path(__file__).resolve().parent / "baselines" / "engine_baseline.json"
 )
+TEMPORAL_BENCH_PATH = (
+    Path(__file__).resolve().parent / "results" / "BENCH_temporal.json"
+)
+TEMPORAL_BASELINE_PATH = (
+    Path(__file__).resolve().parent / "baselines" / "temporal_baseline.json"
+)
 
 RATIO_TOL = 0.01
+
+# The committed margin time-correlated sequences must beat snapshots by
+# (the tentpole claim of the temporal subsystem).  Noise-dominated hard
+# cases are still tracked but only against their own committed win.
+TEMPORAL_WIN_FLOOR = 1.3
 
 
 def extract_baseline(bench: dict) -> dict:
@@ -87,34 +107,108 @@ def check(baseline: dict, bench: dict, ratio_tol: float = RATIO_TOL) -> list[str
     return problems
 
 
+def extract_temporal_baseline(bench: dict) -> dict:
+    """The gated slice of a BENCH_temporal.json report.  A sequence
+    gates the floor when its measured win already clears it — hard
+    cases (noise-dominated fields) stay tracked but floor-exempt."""
+    return {
+        "eb": bench["eb"],
+        "mode": bench["mode"],
+        "n_frames": bench["n_frames"],
+        "keyframe_interval": bench["keyframe_interval"],
+        "floor": TEMPORAL_WIN_FLOOR,
+        "sequences": {
+            name: {
+                "temporal_win": row["temporal_win"],
+                "gates_floor": row["temporal_win"] >= TEMPORAL_WIN_FLOOR,
+            }
+            for name, row in bench["sequences"].items()
+        },
+    }
+
+
+def check_temporal(baseline: dict, bench: dict,
+                   ratio_tol: float = RATIO_TOL) -> list[str]:
+    """-> list of violations (empty means the temporal gate passes)."""
+    problems = []
+    for key in ("eb", "mode", "n_frames", "keyframe_interval"):
+        if bench.get(key) != baseline.get(key):
+            problems.append(
+                f"bench config drifted: {key}={bench.get(key)!r} vs "
+                f"baseline {baseline.get(key)!r}"
+            )
+    floor = baseline.get("floor", TEMPORAL_WIN_FLOOR)
+    if not any(s.get("gates_floor") for s in baseline["sequences"].values()):
+        problems.append(
+            "baseline marks no sequence as gating the temporal floor — "
+            "the committed-margin claim would be vacuous"
+        )
+    for name, base in baseline["sequences"].items():
+        row = bench["sequences"].get(name)
+        if row is None:
+            problems.append(f"{name}: sequence missing from bench output")
+            continue
+        win = row["temporal_win"]
+        committed = base["temporal_win"]
+        if win < committed * (1.0 - ratio_tol):
+            problems.append(
+                f"{name}: temporal win {win:.3f} fell more than "
+                f"{ratio_tol:.1%} below committed {committed:.3f}"
+            )
+        if base.get("gates_floor") and win < floor:
+            problems.append(
+                f"{name}: temporal win {win:.3f} dropped below the "
+                f"committed floor {floor:g} — chains no longer beat "
+                "snapshots by the promised margin"
+            )
+    return problems
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
-    ap.add_argument("--bench", type=Path, default=BENCH_PATH)
-    ap.add_argument("--baseline", type=Path, default=BASELINE_PATH)
+    ap.add_argument("--bench", type=Path, default=None)
+    ap.add_argument("--baseline", type=Path, default=None)
     ap.add_argument("--ratio-tol", type=float, default=RATIO_TOL)
+    ap.add_argument("--temporal", action="store_true",
+                    help="gate BENCH_temporal.json (chain-vs-snapshot "
+                         "wins) instead of BENCH_engine.json")
     ap.add_argument("--update-baseline", action="store_true",
                     help="rewrite the baseline from the current bench output")
     args = ap.parse_args(argv)
+    if args.bench is None:
+        args.bench = TEMPORAL_BENCH_PATH if args.temporal else BENCH_PATH
+    if args.baseline is None:
+        args.baseline = (TEMPORAL_BASELINE_PATH if args.temporal
+                         else BASELINE_PATH)
+    extract = extract_temporal_baseline if args.temporal else extract_baseline
+    gate = check_temporal if args.temporal else check
+    label = "temporal" if args.temporal else "bench"
 
     bench = json.loads(args.bench.read_text())
     if args.update_baseline:
         args.baseline.parent.mkdir(parents=True, exist_ok=True)
-        args.baseline.write_text(
-            json.dumps(extract_baseline(bench), indent=1) + "\n"
-        )
+        args.baseline.write_text(json.dumps(extract(bench), indent=1) + "\n")
         print(f"baseline updated from {args.bench} -> {args.baseline}")
         return 0
 
     baseline = json.loads(args.baseline.read_text())
-    problems = check(baseline, bench, args.ratio_tol)
+    problems = gate(baseline, bench, args.ratio_tol)
     if problems:
-        print(f"bench regression gate FAILED ({len(problems)} problem(s)):")
+        print(f"{label} regression gate FAILED ({len(problems)} problem(s)):")
         for p in problems:
             print(f"  - {p}")
         return 1
-    n = len(baseline["fields"])
-    print(f"bench regression gate passed: {n} fields within "
-          f"{args.ratio_tol:.1%} ratio tolerance, no transfer growth")
+    if args.temporal:
+        n_gate = sum(1 for s in baseline["sequences"].values()
+                     if s.get("gates_floor"))
+        print(f"temporal regression gate passed: "
+              f"{len(baseline['sequences'])} sequences within "
+              f"{args.ratio_tol:.1%} of committed wins, {n_gate} above the "
+              f"{baseline.get('floor', TEMPORAL_WIN_FLOOR):g}x floor")
+    else:
+        n = len(baseline["fields"])
+        print(f"bench regression gate passed: {n} fields within "
+              f"{args.ratio_tol:.1%} ratio tolerance, no transfer growth")
     return 0
 
 

@@ -14,7 +14,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="table3|table45|table67|fig3|fig4|table89|engine|"
-                         "service|roofline")
+                         "service|temporal|roofline")
     args = ap.parse_args()
 
     from . import (  # noqa: WPS433
@@ -27,6 +27,7 @@ def main() -> None:
         table45_topo,
         table67_nontopo,
         table89_quality,
+        temporal_bench,
     )
     from .common import load_inputs
 
@@ -39,6 +40,7 @@ def main() -> None:
         "table89": table89_quality.run,
         "engine": engine_bench.run,
         "service": service_bench.run,
+        "temporal": temporal_bench.run,
     }
     t0 = time.time()
     inputs = load_inputs()

@@ -1,0 +1,135 @@
+"""Temporal chain vs per-frame snapshot compression: the ratio tracker.
+
+Compresses synthetic time-evolving sequences (``data.fields.
+make_field_sequence``: sub-cell spectral advection and heat-equation
+diffusion over the generator fields) both ways — one v3 chain vs one v2
+snapshot per frame — and writes ``BENCH_temporal.json``.  The headline
+number is ``temporal_win``: snapshot bytes / chain bytes, i.e. how much
+the previous-frame bin predictor buys on correlated data.  Ratios
+depend only on the emitted bytes, which the determinism gate pins
+bit-for-bit, so ``check_regression.py --temporal`` gates them against a
+committed floor (correlated sequences must keep beating snapshots by
+the committed margin).
+
+Also measured: chain compress/decompress throughput, and the
+random-access cost of ``decompress_frame`` on the *last* frame of the
+chain (the worst case: a full residual run behind it) vs a full-chain
+decode.
+
+  PYTHONPATH=src python -m benchmarks.run --only temporal
+"""
+from __future__ import annotations
+
+import json
+import platform
+import time
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro import engine, temporal
+from repro.data.fields import SEQUENCE_EVOLUTIONS, make_field_sequence
+from repro.tda import local_order_violations
+
+from .common import emit
+
+OUT_PATH = Path(__file__).resolve().parent / "results" / "BENCH_temporal.json"
+
+PLAN = engine.CompressionPlan(tile_shape=(16, 16, 64), batch_tiles=8)
+EB = 1e-2
+N_FRAMES = 8
+KEYFRAME_INTERVAL = 8
+REPEATS = 3
+
+SEQUENCES = [
+    ("advect", "gaussians", (32, 32, 24), "float32"),
+    ("advect", "turbulence", (32, 32, 24), "float32"),
+    ("diffuse", "gaussians", (32, 32, 24), "float32"),
+    ("diffuse", "turbulence", (32, 32, 24), "float32"),
+    ("advect", "waves", (24, 24, 24), "float64"),
+    ("diffuse", "front", (24, 24, 24), "float64"),
+]
+
+
+def _best_of(fn, repeats=REPEATS):
+    out, times = None, []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn()
+        times.append(time.perf_counter() - t0)
+    return out, min(times)
+
+
+def run(inputs=None) -> dict:
+    del inputs  # sequences are generated, not the snapshot paper inputs
+    rows = []
+    report = {
+        "eb": EB,
+        "mode": "noa",
+        "tile_shape": list(PLAN.tile_shape),
+        "n_frames": N_FRAMES,
+        "keyframe_interval": KEYFRAME_INTERVAL,
+        "repeats": REPEATS,
+        "backend": jax.default_backend(),
+        "platform": platform.platform(),
+        "sequences": {},
+    }
+    for evo, base, shape, dtype in SEQUENCES:
+        assert evo in SEQUENCE_EVOLUTIONS
+        name = f"{evo}/{base}/{dtype}"
+        frames = make_field_sequence(evo, base, shape, N_FRAMES,
+                                     np.dtype(dtype), seed=11)
+        raw_mb = sum(f.nbytes for f in frames) / 1e6
+
+        chain, t_chain = _best_of(lambda: temporal.compress_chain(
+            frames, EB, plan=PLAN, keyframe_interval=KEYFRAME_INTERVAL))
+        snaps, t_snap = _best_of(
+            lambda: engine.compress_many(frames, EB, plan=PLAN))
+        snap_bytes = sum(len(b) for b in snaps)
+
+        decoded, t_dchain = _best_of(
+            lambda: temporal.decompress_chain(chain, plan=PLAN))
+        last, t_frame = _best_of(
+            lambda: temporal.decompress_frame(chain, N_FRAMES - 1, plan=PLAN))
+        assert np.array_equal(last, decoded[-1])
+        order_violations = 0
+        for f, y in zip(frames, decoded):
+            bound = EB * (float(f.max()) - float(f.min()))
+            err = np.abs(f.astype(np.float64) - y.astype(np.float64)).max()
+            assert err <= bound, (name, err, bound)
+            # the paper guarantee, per decoded frame: full local order
+            order_violations += local_order_violations(f, y)
+        assert order_violations == 0, name
+
+        raw = sum(f.nbytes for f in frames)
+        entry = {
+            "shape": list(shape),
+            "dtype": dtype,
+            "frames_mb": raw_mb,
+            "chain_bytes": len(chain),
+            "snapshot_bytes": snap_bytes,
+            "chain_ratio": raw / len(chain),
+            "snapshot_ratio": raw / snap_bytes,
+            "temporal_win": snap_bytes / len(chain),
+            "chain_compress_mbps": raw_mb / t_chain,
+            "snapshot_compress_mbps": raw_mb / t_snap,
+            "chain_decompress_mbps": raw_mb / t_dchain,
+            "decompress_last_frame_ms": t_frame * 1e3,
+            "order_violations_all_frames": int(order_violations),
+        }
+        report["sequences"][name] = entry
+        rows.append((f"{name}_chain_compress", t_chain,
+                     f"win {entry['temporal_win']:.2f}x over snapshots "
+                     f"(ratio {entry['chain_ratio']:.1f} vs "
+                     f"{entry['snapshot_ratio']:.1f})"))
+
+    OUT_PATH.parent.mkdir(parents=True, exist_ok=True)
+    OUT_PATH.write_text(json.dumps(report, indent=1) + "\n")
+    emit(rows, "temporal chain vs per-frame snapshots")
+    print(f"# wrote {OUT_PATH}")
+    return report
+
+
+if __name__ == "__main__":
+    run()

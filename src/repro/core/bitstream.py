@@ -34,6 +34,34 @@ Integrity is split so partial decode stays cheap: one crc over the
 header+index, one crc *per tile* over its payload bytes.  A reader can
 verify and decode any tile subset without touching the rest.
 
+Container v3 (the temporal chain format, ``repro.temporal``) stores a
+whole *time series* of one field shape: a frame index of keyframes and
+bin-residual frames, each frame carrying its own per-tile section table
+and crc, so ``decompress_frame(t)`` touches at most one keyframe plus
+the residual run back to it:
+
+  [4s magic][u8 version=3][u8 flags][u8 dtype][u8 ndim][u64 shape*ndim]
+  [u8 eb_mode][f64 eb][f64 eps_abs]
+  [u64 tile_shape*3][u64 grid*3]
+  [u32 n_frames][u32 keyframe_interval][u32 n_tiles][u8 n_extra]
+  extras dir : n_extra x [u8 tag][u64 off][u64 len]
+  frame index: n_frames x [u8 kind][u8 fflags][u64 off][u64 len][u32 crc32]
+  [u32 crc32 of every byte above]
+  data area  : concatenated frame payloads (offsets from its start)
+
+``kind`` is 0 (keyframe: bins stored like a v2 snapshot) or 1 (residual:
+bins stored as the difference to the previous frame's bins); ``fflags``
+is a per-frame flags byte (bit 1 = FLAG_HAS_NONFINITE).  A frame payload
+is itself a small indexed table (see serialize_frame_payload):
+
+  [u32 n_tiles]
+  tile table  : n_tiles x [u64 bins_len][u64 sub_len]
+  [u64 nonfinite_len]
+  concatenated per-tile bins+subbins payloads, then the nonfinite sidecar
+
+The byte-level normative description of all three formats lives in
+docs/format.md.
+
 RZE section payload:
 
   [u32 n_chunks][u32 chunk_len][u8 word_bytes][u8 final_rze]
@@ -60,6 +88,7 @@ from ..codecs.rze import (
 MAGIC = b"LOPC"
 VERSION = 1
 VERSION_TILED = 2
+VERSION_CHAIN = 3
 
 DTYPE_CODES = {np.dtype(np.float32): 0, np.dtype(np.float64): 1}
 CODES_DTYPE = {v: k for k, v in DTYPE_CODES.items()}
@@ -77,6 +106,12 @@ FLAG_HAS_NONFINITE = 2
 
 # v2 extras must be understood to be decoded safely: reject unknowns.
 V2_KNOWN_TAGS = frozenset({TAG_NONFINITE})
+
+# v3 (chain) frame kinds + chain-level extras (none defined yet: the
+# nonfinite sidecar is per frame, inside the frame payload).
+FRAME_KEY = 0
+FRAME_RESIDUAL = 1
+V3_KNOWN_TAGS = frozenset()
 
 
 class Writer:
@@ -429,3 +464,219 @@ def read_container_v2(blob: bytes) -> ContainerV2:
         raise ValueError("truncated stream")
     header = Header(CODES_DTYPE[dtc], shape, eb_mode, eb, eps_abs, flags)
     return ContainerV2(header, tile_shape, grid, entries, extra, data_off, blob)
+
+
+# ---------------------------------------------------------- container v3
+
+@dataclass
+class FrameEntry:
+    kind: int    # FRAME_KEY | FRAME_RESIDUAL
+    flags: int   # per-frame flags byte (FLAG_HAS_NONFINITE)
+    off: int
+    length: int
+    crc: int
+
+
+_FRAME_ENTRY_FMT = "BBQQI"
+
+
+def serialize_frame_payload(tiles: list[tuple[bytes, bytes]],
+                            nonfinite: bytes = b"") -> bytes:
+    """Assemble one frame's payload: an indexed per-tile section table
+    (bins stream first — the keyframe bins or the temporal residual —
+    then the frame's own subbin stream) plus the frame's optional
+    non-finite sidecar."""
+    w = Writer()
+    w.pack("I", len(tiles))
+    for bins_b, sub_b in tiles:
+        w.pack("QQ", len(bins_b), len(sub_b))
+    w.pack("Q", len(nonfinite))
+    for bins_b, sub_b in tiles:
+        w.raw(bins_b)
+        w.raw(sub_b)
+    w.raw(nonfinite)
+    return w.getvalue()
+
+
+def parse_frame_payload(payload: bytes,
+                        n_tiles: int) -> tuple[list[tuple[bytes, bytes]], bytes]:
+    """-> (per-tile (bins, sub) payload pairs, nonfinite sidecar)."""
+    r = Reader(payload)
+    n = r.unpack("I")
+    if n != n_tiles:
+        raise ValueError(
+            f"corrupt LOPC chain (frame holds {n} tiles, chain grid "
+            f"expects {n_tiles})"
+        )
+    lens = [r.unpack("QQ") for _ in range(n)]
+    nonfinite_len = r.unpack("Q")
+    tiles = [(r.raw(bl), r.raw(sl)) for bl, sl in lens]
+    nonfinite = r.raw(nonfinite_len)
+    if r.off != len(payload):
+        raise ValueError("corrupt LOPC chain (frame payload length mismatch)")
+    return tiles, nonfinite
+
+
+def write_container_v3(
+    header: Header,
+    tile_shape: tuple[int, int, int],
+    grid: tuple[int, int, int],
+    keyframe_interval: int,
+    frames: list[tuple[int, int, bytes]],
+    extra: dict[int, bytes] | None = None,
+) -> bytes:
+    """Assemble a chain (v3) container.
+
+    ``frames`` holds one ``(kind, frame_flags, payload)`` triple per
+    frame in time order (payloads from :func:`serialize_frame_payload`);
+    ``keyframe_interval`` is the committed keyframe stride (0 = only
+    frame 0 is a keyframe).  ``header.shape`` is ONE frame's shape; the
+    frame count lives in the chain index.
+    """
+    extra = extra or {}
+    for tag in extra:
+        if tag not in V3_KNOWN_TAGS:
+            raise ValueError(f"unknown v3 section tag {tag}")
+    if not frames:
+        raise ValueError("a chain needs at least one frame")
+    if frames[0][0] != FRAME_KEY:
+        raise ValueError("frame 0 of a chain must be a keyframe")
+    data = Writer()
+    entries = []
+    off = 0
+    for kind, fflags, payload in frames:
+        if kind not in (FRAME_KEY, FRAME_RESIDUAL):
+            raise ValueError(f"unknown frame kind {kind}")
+        crc = zlib.crc32(payload) & 0xFFFFFFFF
+        entries.append(FrameEntry(kind, fflags, off, len(payload), crc))
+        data.raw(payload)
+        off += len(payload)
+    extra_dir = []
+    for tag, payload in sorted(extra.items()):
+        extra_dir.append((tag, off, len(payload)))
+        data.raw(payload)
+        off += len(payload)
+
+    w = Writer()
+    w.raw(MAGIC)
+    w.pack("BBBB", VERSION_CHAIN, header.flags,
+           DTYPE_CODES[np.dtype(header.dtype)], len(header.shape))
+    w.pack("Q" * len(header.shape), *header.shape)
+    w.pack("B", EB_MODES[header.eb_mode])
+    w.pack("dd", header.eb, header.eps_abs)
+    w.pack("QQQ", *tile_shape)
+    w.pack("QQQ", *grid)
+    w.pack("IIIB", len(entries), keyframe_interval,
+           int(np.prod(grid)), len(extra_dir))
+    for tag, eoff, elen in extra_dir:
+        w.pack("BQQ", tag, eoff, elen)
+    for e in entries:
+        w.pack(_FRAME_ENTRY_FMT, e.kind, e.flags, e.off, e.length, e.crc)
+    head = w.getvalue()
+    return head + struct.pack("<I", zlib.crc32(head) & 0xFFFFFFFF) + data.getvalue()
+
+
+@dataclass
+class ContainerV3:
+    """Parsed v3 chain: header + frame index over a zero-copy blob.
+
+    Frame payloads are sliced (and crc-verified) lazily, so a reader can
+    decode any frame run — the basis of ``decompress_frame``'s
+    keyframe-bounded random access.
+    """
+
+    header: Header
+    tile_shape: tuple[int, int, int]
+    grid: tuple[int, int, int]
+    keyframe_interval: int
+    entries: list[FrameEntry]
+    extra: dict[int, tuple[int, int]]
+    data_off: int
+    blob: bytes
+
+    @property
+    def n_frames(self) -> int:
+        return len(self.entries)
+
+    @property
+    def n_tiles(self) -> int:
+        return int(np.prod(self.grid))
+
+    def frame_payload(self, t: int) -> bytes:
+        e = self.entries[t]
+        lo = self.data_off + e.off
+        b = self.blob[lo : lo + e.length]
+        if len(b) != e.length:
+            raise ValueError("truncated stream")
+        if (zlib.crc32(b) & 0xFFFFFFFF) != e.crc:
+            raise ValueError(f"corrupt LOPC chain (frame {t} crc mismatch)")
+        return b
+
+    def frame_tiles(self, t: int) -> tuple[list[tuple[bytes, bytes]], bytes]:
+        """Parsed payload of frame ``t`` -> (tile sections, nonfinite)."""
+        return parse_frame_payload(self.frame_payload(t), self.n_tiles)
+
+    def keyframe_before(self, t: int) -> int:
+        """Index of the latest keyframe at or before frame ``t`` — the
+        start of the (bounded) residual run a random-access decode
+        replays."""
+        if not 0 <= t < self.n_frames:
+            raise ValueError(f"frame {t} out of range (chain has "
+                             f"{self.n_frames} frames)")
+        for k in range(t, -1, -1):
+            if self.entries[k].kind == FRAME_KEY:
+                return k
+        raise ValueError("corrupt LOPC chain (no keyframe before frame)")
+
+
+def read_container_v3(blob: bytes) -> ContainerV3:
+    r = Reader(blob)
+    if r.raw(4) != MAGIC:
+        raise ValueError("not an LOPC container")
+    version, flags, dtc, ndim = r.unpack("BBBB")
+    if version != VERSION_CHAIN:
+        raise ValueError(f"unsupported container version {version}")
+    if dtc not in CODES_DTYPE:
+        raise ValueError(f"corrupt LOPC container (dtype code {dtc})")
+    if ndim < 1 or ndim > 3:
+        raise ValueError(f"corrupt LOPC container (ndim={ndim})")
+    shape = tuple(np.atleast_1d(r.unpack("Q" * ndim)).tolist()) if ndim > 1 else (r.unpack("Q"),)
+    mode_code = r.unpack("B")
+    if mode_code not in MODES_EB:
+        raise ValueError(f"corrupt LOPC container (eb mode {mode_code})")
+    eb_mode = MODES_EB[mode_code]
+    eb, eps_abs = r.unpack("dd")
+    tile_shape = tuple(r.unpack("QQQ"))
+    grid = tuple(r.unpack("QQQ"))
+    if min(tile_shape) < 1 or min(grid) < 1:
+        raise ValueError("corrupt LOPC container (zero tile/grid extent)")
+    n_frames, keyframe_interval, n_tiles, n_extra = r.unpack("IIIB")
+    if n_frames < 1:
+        raise ValueError("corrupt LOPC chain (empty frame index)")
+    if n_tiles != int(np.prod(grid)):
+        raise ValueError("corrupt LOPC container (tile count/grid mismatch)")
+    extra = {}
+    for _ in range(n_extra):
+        tag, off, n = r.unpack("BQQ")
+        if tag not in V3_KNOWN_TAGS:
+            raise ValueError(f"unknown v3 section tag {tag}")
+        extra[tag] = (off, n)
+    entries = [FrameEntry(*r.unpack(_FRAME_ENTRY_FMT)) for _ in range(n_frames)]
+    head_crc_expected = zlib.crc32(blob[: r.off]) & 0xFFFFFFFF
+    if r.unpack("I") != head_crc_expected:
+        raise ValueError("corrupt LOPC container (index crc mismatch)")
+    data_off = r.off
+    for e in entries:
+        if e.kind not in (FRAME_KEY, FRAME_RESIDUAL):
+            raise ValueError(f"corrupt LOPC chain (frame kind {e.kind})")
+    if entries[0].kind != FRAME_KEY:
+        raise ValueError("corrupt LOPC chain (frame 0 is not a keyframe)")
+    end = max(
+        [e.off + e.length for e in entries]
+        + [off + n for off, n in extra.values()]
+    )
+    if data_off + end > len(blob):
+        raise ValueError("truncated stream")
+    header = Header(CODES_DTYPE[dtc], shape, eb_mode, eb, eps_abs, flags)
+    return ContainerV3(header, tile_shape, grid, keyframe_interval, entries,
+                       extra, data_off, blob)

@@ -192,6 +192,10 @@ def decompress(blob: bytes) -> np.ndarray:
         from .. import engine as _engine
 
         return _engine.decompress(blob)
+    if version == bitstream.VERSION_CHAIN:
+        from .. import temporal as _temporal
+
+        return _temporal.decompress_chain(blob)  # (n_frames, *shape)
     return _decompress_v1(blob)
 
 

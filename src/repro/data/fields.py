@@ -82,6 +82,59 @@ PAPER_INPUTS = {
 }
 
 
+def _spectrum(x: np.ndarray):
+    """FFT + wavenumber grids of a field (helper for the sequence ops)."""
+    spec = np.fft.fftn(x)
+    ks = np.meshgrid(*[np.fft.fftfreq(n) for n in x.shape], indexing="ij")
+    return spec, ks
+
+
+def _advect(x0: np.ndarray, t: int, velocity: float) -> np.ndarray:
+    """Periodic advection by ``velocity * t`` cells along every axis.
+
+    Implemented as a Fourier phase shift, so fractional (sub-cell)
+    velocities produce the smooth frame-to-frame drift real transport
+    codes emit — the regime temporal residuals are built for.  (A whole-
+    pixel np.roll is the *worst* correlated case: its bin residual is
+    exactly the spatial gradient, i.e. what spatial delta already
+    captures.)
+    """
+    spec, ks = _spectrum(x0)
+    phase = sum(k * (velocity * t) for k in ks)
+    return np.real(np.fft.ifftn(spec * np.exp(-2j * np.pi * phase)))
+
+
+def _diffuse(x0: np.ndarray, t: int, rate: float) -> np.ndarray:
+    """Heat-equation evolution: spectral decay exp(-rate * k^2 * t)."""
+    spec, ks = _spectrum(x0)
+    k2 = sum((2 * np.pi * k) ** 2 for k in ks)
+    return np.real(np.fft.ifftn(spec * np.exp(-rate * k2 * t)))
+
+
+# Default evolution parameters: a CFL-respecting sub-cell transport
+# velocity and a mild diffusion rate — the frame-to-frame step sizes
+# production solvers actually emit at typical output cadence.
+SEQUENCE_EVOLUTIONS = {
+    "advect": lambda x0, t: _advect(x0, t, velocity=0.15),
+    "diffuse": lambda x0, t: _diffuse(x0, t, rate=0.25),
+}
+
+
+def make_field_sequence(evolution: str, base: str, shape, n_frames: int,
+                        dtype=None, seed: int = 0) -> list[np.ndarray]:
+    """Deterministic time series: a generator field evolved per frame.
+
+    ``evolution`` picks the frame-to-frame operator (``advect`` — smooth
+    periodic transport at a sub-cell velocity; ``diffuse`` — heat-
+    equation decay); ``base`` is any :data:`FIELD_GENERATORS` name.
+    Frame 0 is exactly ``make_scientific_field(base, shape, seed=seed)``.
+    """
+    evolve = SEQUENCE_EVOLUTIONS[evolution]
+    x0 = make_scientific_field(base, shape, np.float64, seed=seed)
+    dtype = dtype or np.float64
+    return [evolve(x0, t).astype(dtype) for t in range(n_frames)]
+
+
 def make_scientific_field(name: str, shape=None, dtype=None, seed: int = 0) -> np.ndarray:
     if name in PAPER_INPUTS:
         gen, default_shape, default_dtype = PAPER_INPUTS[name]

@@ -241,13 +241,25 @@ def _quantize_halo(x_h: jnp.ndarray, eps_b: jnp.ndarray, dtype) -> jnp.ndarray:
 
 # ------------------------------------------------ lossless stage (shared)
 
-def _encode_ints(ints: jnp.ndarray, chunk_len: int, use_delta: bool):
+# How integers become unsigned words ahead of BIT/RZE:
+#   delta    spatial delta + zigzag   (snapshot/keyframe bins: the field
+#                                      itself carries the smooth signal)
+#   zigzag   zigzag only              (temporal bin residuals: the
+#                                      previous-frame prediction already
+#                                      removed the smooth component, so a
+#                                      second spatial delta only adds
+#                                      noise)
+#   raw      reinterpret as unsigned  (subbins: non-negative counts)
+TRANSFORMS = ("delta", "zigzag", "raw")
+
+
+def _encode_ints(ints: jnp.ndarray, chunk_len: int, transform: str):
     """(C, E) ints -> (bitmap, raw shuffled words, counts) per chunk.
 
     Each tile occupies ceil(E/chunk_len) consecutive chunk rows, so the
     host can slice out independent per-tile sections (the v2 container's
     unit of parallel decode).  Same stage order as codecs.pipeline
-    ([delta ->] zigzag|reinterpret -> BIT_w -> RZE_w), except the RZE
+    ([delta ->] [zigzag|reinterpret] -> BIT_w -> RZE_w), except the RZE
     word compaction stays on the host: the serializer compacts the raw
     words with one boolean index (identical bytes, identical download
     size), which beats XLA's CPU scatter lowering by an order of
@@ -257,25 +269,33 @@ def _encode_ints(ints: jnp.ndarray, chunk_len: int, use_delta: bool):
     n_chunks = -(-e // chunk_len)
     padded = jnp.pad(ints, ((0, 0), (0, n_chunks * chunk_len - e)))
     chunks = padded.reshape(b * n_chunks, chunk_len)
-    if use_delta:
+    if transform == "delta":
         words = zigzag_encode(delta_encode(chunks))
-    else:
+    elif transform == "zigzag":
+        words = zigzag_encode(chunks)
+    elif transform == "raw":
         words = chunks.astype(
             jnp.dtype(jnp.dtype(chunks.dtype).str.replace("i", "u"))
         )
+    else:
+        raise ValueError(f"unknown transform {transform!r} (want {TRANSFORMS})")
     shuffled = bitshuffle(words)
     bitmap, counts = rze_bitmap(shuffled)
     return bitmap, shuffled, counts
 
 
-def _decode_ints(bitmap, packed, tile_elems: int, use_delta: bool, out_dtype):
+def _decode_ints(bitmap, packed, tile_elems: int, transform: str, out_dtype):
     """Inverse of _encode_ints -> (C, tile_elems) ints."""
     shuffled = rze_decode(bitmap, packed)
     words = bitunshuffle(shuffled)
-    if use_delta:
+    if transform == "delta":
         chunks = delta_decode(zigzag_decode(words))
-    else:
+    elif transform == "zigzag":
+        chunks = zigzag_decode(words)
+    elif transform == "raw":
         chunks = words.astype(out_dtype)
+    else:
+        raise ValueError(f"unknown transform {transform!r} (want {TRANSFORMS})")
     rows, chunk_len = chunks.shape
     n_chunks = -(-tile_elems // chunk_len)
     b = rows // n_chunks
@@ -353,11 +373,11 @@ def resident_solve(flags, idx, mask, max_rounds, solver: str,
                            interpret, local_max_iters, max_rounds)
 
 
-@partial(jax.jit, static_argnames=("chunk_len", "use_delta"))
-def encode_tiles(ints, chunk_len: int, use_delta: bool):
+@partial(jax.jit, static_argnames=("chunk_len", "transform"))
+def encode_tiles(ints, chunk_len: int, transform: str):
     """Jitted lossless stage over (C, tile_elems) resident integers."""
     TRACE_COUNTS["encode"] += 1
-    return _encode_ints(ints, chunk_len, use_delta)
+    return _encode_ints(ints, chunk_len, transform)
 
 
 def resident_compress(x_h, eps, idx, mask, max_rounds, dtype,
@@ -378,7 +398,7 @@ def resident_compress(x_h, eps, idx, mask, max_rounds, dtype,
     bins_enc, flags = resident_frontend(x_h, eps, jnp.dtype(dtype),
                                         preserve_order)
     bins_streams = encode_tiles(
-        bins_enc.astype(bins_store).reshape(capacity, -1), bins_chunk, True
+        bins_enc.astype(bins_store).reshape(capacity, -1), bins_chunk, "delta"
     )
     if not preserve_order:
         zc = jnp.zeros((capacity,), jnp.int32)
@@ -400,11 +420,35 @@ def _sub_max(sub):
     return jnp.max(sub)
 
 
-@partial(jax.jit, static_argnames=("tile_elems", "use_delta", "out_dtype"))
-def decode_tiles(bitmap, packed, tile_elems: int, use_delta: bool, out_dtype):
+@partial(jax.jit, static_argnames=("tile_elems", "transform", "out_dtype"))
+def decode_tiles(bitmap, packed, tile_elems: int, transform: str, out_dtype):
     """Jitted inverse of encode_tiles -> (C, tile_elems) resident ints."""
     TRACE_COUNTS["decode"] += 1
-    return _decode_ints(bitmap, packed, tile_elems, use_delta, out_dtype)
+    return _decode_ints(bitmap, packed, tile_elems, transform, out_dtype)
+
+
+# --------------------------------------------- temporal chain stages
+#
+# Frame chains (src/repro/temporal/) predict frame t's bins from the
+# previous frame's bins.  Both stages are trivially elementwise; they
+# are jitted separately so the predictor state (the previous frame's
+# bin grid) stays a device array between frames — the chain never
+# round-trips bins through the host.
+
+@jax.jit
+def residual_tiles(bins_enc, prev_bins):
+    """Temporal bin residual of one resident frame batch vs the decoded
+    previous-frame bins (identical integers, since the bins stream is
+    lossless)."""
+    TRACE_COUNTS["residual"] += 1
+    return bins_enc - prev_bins
+
+
+@jax.jit
+def accumulate_bins(prev_bins, residual):
+    """Decode-side inverse of :func:`residual_tiles`."""
+    TRACE_COUNTS["accumulate"] += 1
+    return prev_bins + residual.astype(prev_bins.dtype)
 
 
 @partial(jax.jit, static_argnames=("dtype",))
@@ -428,13 +472,15 @@ def resident_decode_order(bitmap, packed, sub_bitmap, sub_packed, eps,
     -> dequantize; intermediates stay device-resident between stages.
     Stream word widths come from the arrays themselves (the section
     header dictated them), so narrowed and legacy widths share a path."""
-    bins = decode_tiles(bitmap, packed, tile_elems, True, _signed_twin(packed))
-    subs = decode_tiles(sub_bitmap, sub_packed, tile_elems, False,
+    bins = decode_tiles(bitmap, packed, tile_elems, "delta",
+                        _signed_twin(packed))
+    subs = decode_tiles(sub_bitmap, sub_packed, tile_elems, "raw",
                         _signed_twin(sub_packed))
     return dequantize_tiles(bins, subs, eps, jnp.dtype(dtype))
 
 
 def resident_decode_plain(bitmap, packed, eps, tile_elems: int, dtype):
     """Decode without a subbin stream (preserve_order=False)."""
-    bins = decode_tiles(bitmap, packed, tile_elems, True, _signed_twin(packed))
+    bins = decode_tiles(bitmap, packed, tile_elems, "delta",
+                        _signed_twin(packed))
     return dequantize_tiles(bins, jnp.zeros_like(bins), eps, jnp.dtype(dtype))

@@ -336,7 +336,10 @@ def _decode_tile_batch(c: bitstream.ContainerV2, tile_ids, layout, plan):
     )
 
 
-def _layout_of(c: bitstream.ContainerV2, plan) -> TileLayout:
+def container_layout(c) -> TileLayout:
+    """TileLayout of a parsed tiled container (v2 snapshot or v3 chain —
+    both expose header/tile_shape/grid/n_tiles), validating that the
+    stored geometry is consistent with the field shape."""
     canonical = canonical3d_shape(c.header.shape)
     layout = TileLayout(tuple(c.header.shape), canonical,
                         tuple(int(t) for t in c.tile_shape),
@@ -356,20 +359,26 @@ def decompress(blob: bytes, plan: CompressionPlan | None = None) -> np.ndarray:
     """
     plan = plan or DEFAULT_PLAN
     c = bitstream.read_container_v2(blob)
-    layout = _layout_of(c, plan)
+    layout = container_layout(c)
     values = _decode_tile_batch(c, list(range(layout.n_tiles)), layout, plan)
     return _assemble_field(values, c, layout)
 
 
-def _assemble_field(values, c: bitstream.ContainerV2, layout: TileLayout):
-    """Scatter decoded tile interiors back into the original field."""
+def assemble_interiors(values: np.ndarray, layout: TileLayout,
+                       shape) -> np.ndarray:
+    """Scatter decoded (n_tiles, *tile) interiors back into a field of
+    the original ``shape`` (shared by v2 snapshot and v3 chain decode)."""
     pb = np.zeros(tuple(d + 2 * HALO for d in layout.padded), values.dtype)
     scatter_interiors(values, layout, pb)
     padded = pb[HALO:-HALO, HALO:-HALO, HALO:-HALO]
     cn = layout.canonical
-    out = np.ascontiguousarray(
+    return np.ascontiguousarray(
         padded[: cn[0], : cn[1], : cn[2]]
-    ).reshape(c.header.shape)
+    ).reshape(shape)
+
+
+def _assemble_field(values, c: bitstream.ContainerV2, layout: TileLayout):
+    out = assemble_interiors(values, layout, c.header.shape)
     if c.header.flags & FLAG_HAS_NONFINITE:
         out = decode_nonfinite(c.extra_section(bitstream.TAG_NONFINITE), out)
     return out
@@ -385,7 +394,7 @@ def decompress_many(blobs, plan: CompressionPlan | None = None,
     parsed = []
     for b in blobs:
         c = bitstream.read_container_v2(b)
-        parsed.append((c, _layout_of(c, plan)))
+        parsed.append((c, container_layout(c)))
     groups: dict[tuple, list[int]] = {}
     for i, (c, layout) in enumerate(parsed):
         order = bool(c.header.flags & FLAG_ORDER_PRESERVING)
@@ -418,14 +427,23 @@ def decompress_roi(blob: bytes, region: tuple[slice, ...],
                    plan: CompressionPlan | None = None) -> np.ndarray:
     """Partial decode: reconstruct only ``region`` of the field.
 
-    Touches exactly the tiles intersecting the region (the v2 index makes
-    them addressable without scanning the stream).  Zero-volume regions
+    ``region`` has exactly one slice per *original* field dimension
+    (1/2/3-D fields take 1/2/3 slices — canonicalization to 3-D is an
+    internal detail and never appears in the API).  Slice semantics are
+    numpy's: negative indices count from the field end, out-of-range
+    stops clamp to the field extent, and the result equals
+    ``decompress(blob)[region]`` exactly.  Steps must be 1 (validated on
+    every axis, even when another axis is empty); zero-volume regions
     (empty or reversed slices) return an empty array without touching
-    the device.
+    the device.  Non-finite cells inside the region restore bit-exactly
+    from the sidecar.
+
+    Touches exactly the tiles intersecting the region (the v2 index
+    makes them addressable without scanning the stream).
     """
     plan = plan or DEFAULT_PLAN
     c = bitstream.read_container_v2(blob)
-    layout = _layout_of(c, plan)
+    layout = container_layout(c)
     tile_ids = tiles_for_region(layout, region)
     shape = c.header.shape
     # empty/reversed slices clamp to zero extent (numpy slicing semantics)

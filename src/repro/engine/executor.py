@@ -186,7 +186,7 @@ class Executor:
             subs_cpt, subs_chunk = chunks_per_tile(layout0, sub_store)
             subs_s = device.encode_tiles(
                 sub_dev.astype(jnp.dtype(sub_store)).reshape(capacity, -1),
-                subs_chunk, False,
+                subs_chunk, "raw",
             )
         TRANSFER_COUNTS["d2h_sections"] += 1
         bins_s, subs_s, local1, last_round = jax.device_get(

@@ -202,18 +202,22 @@ def gather_interiors(padded_b: np.ndarray, layout: TileLayout) -> np.ndarray:
 def tiles_for_region(layout: TileLayout, region: tuple[slice, ...]) -> list[int]:
     """Row-major tile ids intersecting a region of the *original* field.
 
-    ``region`` has one slice per original field dim (start/stop only).
+    ``region`` has one slice per original field dim (start/stop only —
+    every axis's step is validated before any zero-extent early return,
+    so a bad step never slips through on an empty region).  Bounds
+    follow numpy slicing: negative indices count from the end, and
+    out-of-range stops clamp to the field extent.
     """
     if len(region) != len(layout.field_shape):
         raise ValueError(
             f"region has {len(region)} slices for a "
             f"{len(layout.field_shape)}-D field"
         )
+    resolved = [sl.indices(n) for sl, n in zip(region, layout.field_shape)]
+    if any(step != 1 for _, _, step in resolved):
+        raise ValueError("region slices must have step 1")
     canon = [slice(0, 1)] * (3 - len(region))
-    for sl, n in zip(region, layout.field_shape):
-        start, stop, step = sl.indices(n)
-        if step != 1:
-            raise ValueError("region slices must have step 1")
+    for start, stop, _ in resolved:
         if stop <= start:
             return []
         canon.append(slice(start, stop))

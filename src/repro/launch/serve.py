@@ -91,16 +91,28 @@ def serve_compression(args):
     def client(cid: int) -> dict:
         # pipelined client: all compresses in flight at once, then the
         # round-trip reads — several requests per client ride each batch
+        from repro.data.fields import make_field_sequence
+
         fields = _client_workload(cid, args.requests_per_client)
         futs = [submit_retrying(svc.submit_compress, x, args.eb)
                 for x in fields]
+        # one time series per client: chain steps of concurrent clients
+        # coalesce into shared resident frame batches
+        chain = make_field_sequence(
+            "advect" if cid % 2 else "diffuse", "gaussians", (24, 24, 16),
+            args.chain_frames, np.float32, seed=cid,
+        )
+        cfut = submit_retrying(svc.submit_compress_chain, chain, args.eb)
         blobs = [f.result() for f in futs]
+        chain_blob = cfut.result()
         dfuts = [submit_retrying(svc.submit_decompress, b) for b in blobs]
         rfuts = [
             submit_retrying(svc.submit_roi, b,
                             tuple(slice(0, min(8, n)) for n in x.shape))
             for x, b in zip(fields, blobs)
         ]
+        ffut = submit_retrying(svc.submit_decompress_frame, chain_blob,
+                               len(chain) - 1)
         for x, df in zip(fields, dfuts):
             y = df.result()
             bound = args.eb * (float(x.max()) - float(x.min()))
@@ -109,8 +121,15 @@ def serve_compression(args):
         for x, rf in zip(fields, rfuts):
             assert rf.result().shape == tuple(
                 min(8, n) for n in x.shape)
-        return {"mb": sum(x.nbytes for x in fields) / 1e6,
-                "fields": fields, "blobs": blobs}
+        last = ffut.result()
+        x = chain[-1]
+        bound = args.eb * (float(x.max()) - float(x.min()))
+        assert np.abs(x.astype(np.float64)
+                      - last.astype(np.float64)).max() <= bound
+        return {"mb": (sum(x.nbytes for x in fields)
+                       + sum(f.nbytes for f in chain)) / 1e6,
+                "fields": fields, "blobs": blobs,
+                "chain": chain, "chain_blob": chain_blob}
 
     with CompressionService(cfg) as svc:
         # warm the program cache off the clock (one trace per bucket),
@@ -130,10 +149,14 @@ def serve_compression(args):
     # byte contract, verified OFF the clock: direct engine.compress
     # calls would also pollute the per-batch transfer-counter deltas the
     # metrics report if they ran concurrently with the service
+    from repro import temporal
+
     for r in results:
         for x, blob in zip(r["fields"], r["blobs"]):
             assert blob == engine.compress(x, args.eb, plan=cfg.plan,
                                            solver=cfg.solver)
+        assert r["chain_blob"] == temporal.compress_chain(
+            r["chain"], args.eb, plan=cfg.plan, solver=cfg.solver)
 
     total_mb = sum(r["mb"] for r in results)
     n_req = m.completed - m0.completed
@@ -141,7 +164,8 @@ def serve_compression(args):
             - m0.mean_batch_occupancy * m0.batches)
            / max(1, m.batches - m0.batches))
     print(f"compression service: {args.clients} concurrent clients x "
-          f"{args.requests_per_client} fields (mixed 1/2/3-D f32/f64), "
+          f"{args.requests_per_client} fields (mixed 1/2/3-D f32/f64) "
+          f"+ one {args.chain_frames}-frame temporal chain each, "
           f"solver={args.solver}")
     print(f"  completed  {n_req} requests ({total_mb:.2f} MB compressed) "
           f"in {wall:.2f}s wall")
@@ -227,6 +251,8 @@ def main():
     ap.add_argument("--clients", type=int, default=8,
                     help="compression service: concurrent client threads")
     ap.add_argument("--requests-per-client", type=int, default=6)
+    ap.add_argument("--chain-frames", type=int, default=4,
+                    help="frames in each client's temporal chain request")
     ap.add_argument("--max-delay-ms", type=float, default=5.0,
                     help="coalescer deadline: how long a lone request "
                          "waits for batch company")

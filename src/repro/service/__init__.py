@@ -13,7 +13,10 @@
 Concurrent requests submitted within ``max_delay_ms`` of each other are
 drained into shared engine micro-batches (same device programs, one
 upload/download per device group); outputs are byte-identical to direct
-``engine.compress`` calls.  See docs/service.md.
+``engine.compress`` calls.  Temporal chains are first-class requests
+(``submit_compress_chain`` / ``submit_decompress_frame``): frames at
+the same time step of concurrent chains share resident batches.  See
+docs/service.md.
 """
 from .metrics import MetricsRecorder, ServiceMetrics, percentile
 from .service import (

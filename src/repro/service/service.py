@@ -23,8 +23,11 @@ Dataflow (one worker, clients on any thread or event loop):
                     the classic deadline/size micro-batching rule
   execute           the drained batch partitions into engine calls:
                     compress requests group by (mode, preserve_order)
-                    into ``compress_many`` calls, decompress requests
-                    into one ``decompress_many``, ROI reads run per
+                    into ``compress_many`` calls, chain requests by the
+                    same key into ``temporal.compress_chains`` calls
+                    (frames at the same time step of concurrent chains
+                    share resident batches), decompress requests into
+                    one ``decompress_many``, ROI and frame reads run per
                     request; the engine then does its own
                     (tile_shape, dtype, width) device grouping and
                     reports it back through the ``group_cb`` hook
@@ -59,7 +62,7 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from .. import engine
+from .. import engine, temporal
 from ..engine import executor as engine_executor
 from ..engine.plan import CompressionPlan
 from .metrics import MetricsRecorder, ServiceMetrics
@@ -194,9 +197,33 @@ class CompressionService:
             "compress", (x, float(eb), mode, bool(preserve_order)), x.nbytes
         ))
 
+    def submit_compress_chain(self, frames, eb, mode: str = "noa",
+                              preserve_order: bool = True,
+                              keyframe_interval=temporal.DEFAULT_KEYFRAME_INTERVAL,
+                              ) -> Future:
+        """Queue a frame sequence for chain compression -> Future[bytes].
+
+        Chains in the same micro-batch (same mode/order) share one
+        ``temporal.compress_chains`` call, so frames at the same time
+        step of concurrent chains ride shared device batches."""
+        frames = [np.asarray(f) for f in frames]
+        return self._submit(_Pending(
+            "chain", (frames, float(eb), mode, bool(preserve_order),
+                      keyframe_interval),
+            sum(f.nbytes for f in frames),
+        ))
+
     def submit_decompress(self, blob: bytes) -> Future:
         """Queue one container for full decode -> Future[np.ndarray]."""
         return self._submit(_Pending("decompress", (blob,), len(blob)))
+
+    def submit_decompress_chain(self, blob: bytes) -> Future:
+        """Queue a v3 chain for full decode -> Future[(T, *shape) array]."""
+        return self._submit(_Pending("chain_decompress", (blob,), len(blob)))
+
+    def submit_decompress_frame(self, blob: bytes, t: int) -> Future:
+        """Queue a random-access frame decode -> Future[np.ndarray]."""
+        return self._submit(_Pending("frame", (blob, int(t)), len(blob)))
 
     def submit_roi(self, blob: bytes, region: tuple) -> Future:
         """Queue a region-of-interest decode -> Future[np.ndarray]."""
@@ -208,8 +235,22 @@ class CompressionService:
                  preserve_order: bool = True) -> bytes:
         return self.submit_compress(x, eb, mode, preserve_order).result()
 
+    def compress_chain(self, frames, eb, mode: str = "noa",
+                       preserve_order: bool = True,
+                       keyframe_interval=temporal.DEFAULT_KEYFRAME_INTERVAL,
+                       ) -> bytes:
+        return self.submit_compress_chain(
+            frames, eb, mode, preserve_order, keyframe_interval
+        ).result()
+
     def decompress(self, blob: bytes) -> np.ndarray:
         return self.submit_decompress(blob).result()
+
+    def decompress_chain(self, blob: bytes) -> np.ndarray:
+        return self.submit_decompress_chain(blob).result()
+
+    def decompress_frame(self, blob: bytes, t: int) -> np.ndarray:
+        return self.submit_decompress_frame(blob, t).result()
 
     def decompress_roi(self, blob: bytes, region: tuple) -> np.ndarray:
         return self.submit_roi(blob, region).result()
@@ -222,8 +263,22 @@ class CompressionService:
             self.submit_compress(x, eb, mode, preserve_order)
         )
 
+    async def acompress_chain(self, frames, eb, mode: str = "noa",
+                              preserve_order: bool = True,
+                              keyframe_interval=temporal.DEFAULT_KEYFRAME_INTERVAL,
+                              ) -> bytes:
+        return await asyncio.wrap_future(self.submit_compress_chain(
+            frames, eb, mode, preserve_order, keyframe_interval
+        ))
+
     async def adecompress(self, blob: bytes) -> np.ndarray:
         return await asyncio.wrap_future(self.submit_decompress(blob))
+
+    async def adecompress_chain(self, blob: bytes) -> np.ndarray:
+        return await asyncio.wrap_future(self.submit_decompress_chain(blob))
+
+    async def adecompress_frame(self, blob: bytes, t: int) -> np.ndarray:
+        return await asyncio.wrap_future(self.submit_decompress_frame(blob, t))
 
     async def adecompress_roi(self, blob: bytes, region: tuple) -> np.ndarray:
         return await asyncio.wrap_future(self.submit_roi(blob, region))
@@ -334,17 +389,22 @@ class CompressionService:
         tc0 = dict(engine_executor.TRANSFER_COUNTS)
 
         # compress requests sharing (mode, preserve_order) share one
-        # compress_many call; the engine sub-groups by device signature
+        # compress_many call, chain requests one compress_chains call
+        # (frames of concurrent chains share resident step batches); the
+        # engine sub-groups by device signature
         comp_groups: dict[tuple, list[_Pending]] = {}
+        chain_groups: dict[tuple, list[_Pending]] = {}
         dec_items: list[_Pending] = []
-        roi_items: list[_Pending] = []
+        per_item: list[_Pending] = []   # roi / frame / chain decode
         for p in batch:
             if p.kind == "compress":
                 comp_groups.setdefault(p.args[2:], []).append(p)
+            elif p.kind == "chain":
+                chain_groups.setdefault(p.args[2:4], []).append(p)
             elif p.kind == "decompress":
                 dec_items.append(p)
             else:
-                roi_items.append(p)
+                per_item.append(p)
 
         for (mode, order), members in comp_groups.items():
             self._run_many(
@@ -352,6 +412,16 @@ class CompressionService:
                 lambda ms, cb: engine.compress_many(
                     [p.args[0] for p in ms], [p.args[1] for p in ms], mode,
                     order, self.config.solver, self.config.plan,
+                    group_cb=cb,
+                ),
+            )
+        for (mode, order), members in chain_groups.items():
+            self._run_many(
+                members,
+                lambda ms, cb: temporal.compress_chains(
+                    [p.args[0] for p in ms], [p.args[1] for p in ms], mode,
+                    order, self.config.solver, self.config.plan,
+                    keyframe_interval=[p.args[4] for p in ms],
                     group_cb=cb,
                 ),
             )
@@ -363,10 +433,17 @@ class CompressionService:
                     group_cb=cb,
                 ),
             )
-        for p in roi_items:
+        for p in per_item:
             try:
-                out = engine.decompress_roi(p.args[0], p.args[1],
-                                            plan=self.config.plan)
+                if p.kind == "roi":
+                    out = engine.decompress_roi(p.args[0], p.args[1],
+                                                plan=self.config.plan)
+                elif p.kind == "frame":
+                    out = temporal.decompress_frame(p.args[0], p.args[1],
+                                                    plan=self.config.plan)
+                else:  # chain_decompress
+                    out = temporal.decompress_chain(p.args[0],
+                                                    plan=self.config.plan)
             except Exception as e:  # noqa: BLE001 - resolved into the Future
                 self._resolve(p, error=e)
             else:

@@ -1,0 +1,31 @@
+"""Temporal residual compression for time-evolving fields.
+
+    from repro import temporal
+
+    blob = temporal.compress_chain(frames, eb=1e-2, keyframe_interval=8)
+    all_frames = temporal.decompress_chain(blob)      # (T, *shape)
+    frame_5 = temporal.decompress_frame(blob, 5)      # keyframe-bounded
+
+Chains predict each frame's quantized bin grid from the previous
+frame's decoded bins (device-resident predictor state) and store only
+the bin residual; the subbin local-order solve still runs per frame, so
+every decoded frame preserves full local order exactly like a snapshot.
+See docs/temporal.md.
+"""
+from .chain import (
+    DEFAULT_KEYFRAME_INTERVAL,
+    ChainStats,
+    compress_chain,
+    compress_chains,
+    decompress_chain,
+    decompress_frame,
+)
+
+__all__ = [
+    "DEFAULT_KEYFRAME_INTERVAL",
+    "ChainStats",
+    "compress_chain",
+    "compress_chains",
+    "decompress_chain",
+    "decompress_frame",
+]

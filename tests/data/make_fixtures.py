@@ -1,0 +1,63 @@
+"""Regenerate the committed format-spec fixtures.
+
+    PYTHONPATH=src python tests/data/make_fixtures.py
+
+The fixtures pin the on-disk formats: `tests/test_format_spec.py`
+decodes them with an independent decoder built ONLY from constants
+restated in docs/format.md and must reproduce `expected.npz` exactly.
+Regenerate (and re-commit, and bump docs/format.md if the layout
+changed) only on an intentional format revision — the determinism gate
+pins container bytes, so an accidental regeneration diff is a format
+break, not noise.
+"""
+from __future__ import annotations
+
+from pathlib import Path
+
+import numpy as np
+
+from repro import engine, temporal
+from repro.data.fields import make_field_sequence, make_scientific_field
+
+HERE = Path(__file__).resolve().parent
+EB = 1e-2
+
+
+def main() -> None:
+    # v2 snapshot: f32, all three section features (order-preserving
+    # subbins, nonfinite sidecar, multi-tile grid)
+    x = make_scientific_field("waves", (13, 11, 9), np.float32, seed=21)
+    x = x.copy()
+    x[3, 4, 5] = np.nan
+    x[0, 0, 0] = np.inf
+    v2 = engine.compress(x, EB)
+    (HERE / "fixture_v2.lopc").write_bytes(v2)
+
+    # v2 snapshot: f64 with a tight absolute bound so the bins stream
+    # needs a wider word than the f32 case
+    y = make_scientific_field("gaussians", (12, 10, 8), np.float64, seed=22)
+    v2_wide = engine.compress(y, 1e-6, mode="abs")
+    (HERE / "fixture_v2_wide.lopc").write_bytes(v2_wide)
+
+    # v3 chain: keyframe interval 2 over 5 frames (both frame kinds,
+    # a mid-chain keyframe, a NaN frame on a residual position)
+    frames = make_field_sequence("advect", "gaussians", (13, 11, 9), 5,
+                                 np.float32, seed=23)
+    frames[3] = frames[3].copy()
+    frames[3][2:4, 1, 0] = np.nan
+    v3 = temporal.compress_chain(frames, EB, keyframe_interval=2)
+    (HERE / "fixture_v3.lopc").write_bytes(v3)
+
+    np.savez(
+        HERE / "expected.npz",
+        v2=engine.decompress(v2),
+        v2_wide=engine.decompress(v2_wide),
+        v3=temporal.decompress_chain(v3),
+    )
+    for p in ("fixture_v2.lopc", "fixture_v2_wide.lopc", "fixture_v3.lopc",
+              "expected.npz"):
+        print(f"{p}: {(HERE / p).stat().st_size} bytes")
+
+
+if __name__ == "__main__":
+    main()

@@ -165,6 +165,54 @@ def test_roi_empty_or_reversed_region(rng):
     assert engine.decompress_roi(blob, (slice(3, 3), slice(0, 2), slice(0, 8))).size == 0
 
 
+def test_roi_edge_semantics(rng):
+    """The documented ROI contract (docs/engine.md): numpy slicing —
+    clamped stops, negative indices — with the result equal to
+    ``decompress(blob)[region]`` on every rank."""
+    x = rng.standard_normal((20, 18, 14))
+    blob = engine.compress(x, 1e-2)
+    full = engine.decompress(blob)
+    # out-of-range stops clamp to the field extent
+    roi = engine.decompress_roi(blob, (slice(10, 999), slice(0, 18),
+                                       slice(12, 99)))
+    assert roi.shape == (10, 18, 2)
+    assert np.array_equal(roi, full[10:, :, 12:])
+    # negative indices count from the end
+    assert np.array_equal(
+        engine.decompress_roi(blob, (slice(-6, None), slice(-4, -1),
+                                     slice(0, 5))),
+        full[-6:, -4:-1, 0:5],
+    )
+    # a full-field region is exactly decompress()
+    assert np.array_equal(
+        engine.decompress_roi(blob, tuple(slice(0, n) for n in x.shape)),
+        full,
+    )
+    # low-rank fields take exactly ndim slices, never canonical-3D ones
+    x1 = rng.standard_normal(120)
+    b1 = engine.compress(x1, 1e-2)
+    assert np.array_equal(engine.decompress_roi(b1, (slice(-30, None),)),
+                          engine.decompress(b1)[-30:])
+    with pytest.raises(ValueError, match="slices for a"):
+        engine.decompress_roi(b1, (slice(0, 5), slice(0, 5)))
+    with pytest.raises(ValueError, match="slices for a"):
+        engine.decompress_roi(blob, (slice(0, 5), slice(0, 5)))
+
+
+def test_roi_step_validated_even_on_empty_regions(rng):
+    """Step validation is uniform: a zero-volume axis must not bypass
+    the step-1 requirement of another axis (was inconsistent before the
+    ROI audit)."""
+    x = rng.standard_normal((12, 10, 8))
+    blob = engine.compress(x, 1e-2)
+    with pytest.raises(ValueError, match="step 1"):
+        engine.decompress_roi(blob, (slice(0, 10, 2), slice(0, 5),
+                                     slice(0, 5)))
+    with pytest.raises(ValueError, match="step 1"):
+        engine.decompress_roi(blob, (slice(5, 2), slice(0, 5, 3),
+                                     slice(0, 5)))
+
+
 def test_per_field_sweep_stats(rng):
     """n_sweeps stays a per-field diagnostic under batching: an easy
     field must not inherit a hard batch-mate's solver cost."""

@@ -1,0 +1,345 @@
+"""Spec conformance: docs/format.md is normative, and this test proves
+it by decoding the committed fixture containers (tests/data/*.lopc)
+with an INDEPENDENT decoder built only from constants and rules
+restated in the spec — nothing below imports the library's bitstream,
+engine, or codec code.  The output must match the committed expected
+arrays bit-exactly (and, as a cross-check, the library's own decode).
+
+If this test fails, either the code drifted from docs/format.md (fix
+the spec or the code) or the committed fixtures were regenerated
+without a format revision (see tests/data/make_fixtures.py).
+"""
+from __future__ import annotations
+
+import struct
+import zlib
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+DATA = Path(__file__).resolve().parent / "data"
+
+# ---- constants restated from docs/format.md (core/bitstream.py) ----
+MAGIC = b"LOPC"
+VERSION_TILED = 2
+VERSION_CHAIN = 3
+DTYPES = {0: np.dtype(np.float32), 1: np.dtype(np.float64)}
+EB_MODES = {0: "abs", 1: "noa"}
+TAG_NONFINITE = 3
+FLAG_ORDER_PRESERVING = 1
+FLAG_HAS_NONFINITE = 2
+FRAME_KEY = 0
+FRAME_RESIDUAL = 1
+TILE_ENTRY = "<QQQQI"
+FRAME_ENTRY = "<BBQQI"
+CHUNK_WORDS = {2: 8192, 4: 4096, 8: 2048}   # word bytes -> words / chunk
+EPS_SHRINK = 1.0 - 2.0**-20                  # core/quantize.py
+
+
+class R:
+    """Minimal little-endian cursor."""
+
+    def __init__(self, buf: bytes, off: int = 0):
+        self.buf, self.off = buf, off
+
+    def take(self, fmt: str):
+        vals = struct.unpack_from("<" + fmt, self.buf, self.off)
+        self.off += struct.calcsize("<" + fmt)
+        return vals if len(vals) > 1 else vals[0]
+
+    def raw(self, n: int) -> bytes:
+        b = self.buf[self.off : self.off + n]
+        assert len(b) == n, "truncated"
+        self.off += n
+        return b
+
+    def lp(self) -> bytes:
+        return self.raw(self.take("Q"))
+
+
+def _header(r: R):
+    assert r.raw(4) == MAGIC
+    version, flags, dtc, ndim = r.take("BBBB")
+    shape = tuple(np.atleast_1d(r.take("Q" * ndim)).tolist()) \
+        if ndim > 1 else (r.take("Q"),)
+    mode = EB_MODES[r.take("B")]
+    eb, eps_abs = r.take("dd")
+    return version, flags, DTYPES[dtc], shape, mode, eb, eps_abs
+
+
+# -------------------------------------------------- RZE section decode
+
+def _undo_final_rze(payload: bytes) -> bytes:
+    r = R(payload)
+    n = r.take("Q")
+    bitmap = np.frombuffer(r.lp(), np.uint8)
+    nonzero = np.frombuffer(payload, np.uint8, offset=r.off)
+    nz = np.unpackbits(bitmap, count=n).astype(bool)
+    out = np.zeros(n, np.uint8)
+    out[nz] = nonzero
+    return out.tobytes()
+
+
+def _bit_untranspose(shuffled: np.ndarray) -> np.ndarray:
+    """Invert BIT_w: plane b (0 = MSB) words -> original words."""
+    n_chunks, chunk_len = shuffled.shape
+    w = shuffled.dtype.itemsize * 8
+    be = shuffled.astype(f">u{shuffled.dtype.itemsize}")
+    # bits of each row, plane-major: bit j of plane b sits at b*chunk_len+j
+    bits = np.unpackbits(be.view(np.uint8).reshape(n_chunks, -1), axis=1)
+    planes = bits.reshape(n_chunks, w, chunk_len)       # [chunk, b, j]
+    wordbits = planes.transpose(0, 2, 1)                # [chunk, j, b]
+    packed = np.packbits(wordbits.reshape(n_chunks, chunk_len, w), axis=2)
+    return (
+        packed.reshape(n_chunks, -1)
+        .view(f">u{shuffled.dtype.itemsize}")
+        .astype(shuffled.dtype)
+    )
+
+
+def decode_rze_section(section: bytes, tile_elems: int,
+                       transform: str) -> np.ndarray:
+    """One RZE section -> the tile's signed integer stream."""
+    r = R(section)
+    n_chunks, chunk_len, word, final = r.take("IIBB")
+    assert CHUNK_WORDS[word] == chunk_len
+    udt = np.dtype(f"<u{word}")
+    payload = section[r.off:]
+    if final:
+        payload = _undo_final_rze(payload)
+    r2 = R(payload)
+    keepmap = np.frombuffer(r2.lp(), np.uint8)
+    kept = np.frombuffer(r2.lp(), udt)
+    data = np.frombuffer(r2.lp(), udt)
+    sdt = np.dtype(f"<i{word}")
+    if n_chunks == 0:  # fully trimmed: every chunk was all-zero
+        return np.zeros(tile_elems, sdt)
+
+    w = word * 8
+    n_bitmap_words = n_chunks * (chunk_len // w)
+    keep = np.unpackbits(keepmap, count=n_bitmap_words).astype(bool)
+    bitmap = (kept[np.cumsum(keep) - 1] if n_bitmap_words
+              else np.zeros(0, udt))
+    # bitmap bit j (MSB-first) = data word j nonzero
+    nzbits = np.unpackbits(
+        bitmap.astype(f">u{word}").view(np.uint8), count=n_chunks * chunk_len
+    ).astype(bool).reshape(n_chunks, chunk_len)
+    shuffled = np.zeros((n_chunks, chunk_len), udt)
+    shuffled[nzbits] = data
+
+    words = _bit_untranspose(shuffled)
+    if transform == "raw":
+        ints = words.astype(sdt)
+    else:
+        # zigzag^-1: (z >> 1) ^ -(z & 1), in the signed twin
+        z = words
+        ints = ((z >> 1) ^ (-(z & 1).astype(sdt)).astype(udt)).astype(sdt)
+        if transform == "delta":
+            # per-chunk cumsum in the STORED width (wrap is intentional)
+            ints = np.cumsum(ints, axis=1, dtype=sdt)
+    # trailing all-zero chunks were trimmed; missing rows are zero
+    cpt = -(-tile_elems // chunk_len)
+    full = np.zeros((cpt, chunk_len), sdt)
+    full[:n_chunks] = ints
+    return full.reshape(-1)[:tile_elems]
+
+
+# ------------------------------------------------- value reconstruction
+
+def _ordered(f: np.ndarray) -> np.ndarray:
+    idt = np.dtype(f"i{f.dtype.itemsize}")
+    bits = f.view(idt)
+    imin = np.iinfo(idt).min
+    return np.where(bits >= 0, bits, imin - bits)
+
+
+def _ordered_inv(m: np.ndarray, dtype) -> np.ndarray:
+    idt = np.dtype(f"i{np.dtype(dtype).itemsize}")
+    m = m.astype(idt)
+    imin = np.iinfo(idt).min
+    bits = np.where(m >= 0, m, imin - m).astype(idt)
+    return bits.view(dtype)
+
+
+def dequantize(bins: np.ndarray, subs: np.ndarray, eps_abs: float,
+               dtype) -> np.ndarray:
+    eps = eps_abs * EPS_SHRINK
+    t = (bins.astype(np.float64) - 0.5) * eps
+    if np.dtype(dtype) == np.float64:
+        base = t
+    else:
+        v = t.astype(np.float32)
+        bumped = _ordered_inv(_ordered(v) + 1, np.float32)
+        base = np.where(v.astype(np.float64) < t, bumped, v)
+    base = base.astype(dtype)
+    return _ordered_inv(_ordered(base) + subs.astype(np.int64), dtype)
+
+
+def _apply_nonfinite(payload: bytes, out: np.ndarray) -> np.ndarray:
+    r = R(payload)
+    packed = np.frombuffer(r.lp(), np.uint8)
+    vals = np.frombuffer(r.lp(), out.dtype)
+    mask = np.unpackbits(packed, count=out.size).astype(bool).reshape(out.shape)
+    out = out.copy()
+    out[mask] = vals
+    return out
+
+
+def _assemble(tile_values, tile_shape, grid, shape, dtype):
+    """Row-major tiles -> cropped field of the original shape."""
+    canonical = (1,) * (3 - len(shape)) + tuple(shape)
+    padded = np.zeros([g * t for g, t in zip(grid, tile_shape)], dtype)
+    it = iter(tile_values)
+    for i in range(grid[0]):
+        for j in range(grid[1]):
+            for k in range(grid[2]):
+                t0, t1, t2 = (i * tile_shape[0], j * tile_shape[1],
+                              k * tile_shape[2])
+                padded[t0:t0 + tile_shape[0], t1:t1 + tile_shape[1],
+                       t2:t2 + tile_shape[2]] = next(it).reshape(tile_shape)
+    return padded[: canonical[0], : canonical[1], : canonical[2]].reshape(shape)
+
+
+# --------------------------------------------------- container decoders
+
+def spec_decode_v2(blob: bytes) -> np.ndarray:
+    r = R(blob)
+    version, flags, dtype, shape, _mode, _eb, eps_abs = _header(r)
+    assert version == VERSION_TILED
+    tile_shape = r.take("QQQ")
+    grid = r.take("QQQ")
+    n_tiles, n_extra = r.take("IB")
+    assert n_tiles == int(np.prod(grid))
+    extras = {}
+    for _ in range(n_extra):
+        tag, off, n = r.take("BQQ")
+        extras[tag] = (off, n)
+    entries = [r.take(TILE_ENTRY.lstrip("<")) for _ in range(n_tiles)]
+    assert r.take("I") == zlib.crc32(blob[: r.off - 4]) & 0xFFFFFFFF
+    data_off = r.off
+
+    order = bool(flags & FLAG_ORDER_PRESERVING)
+    tile_elems = int(np.prod(tile_shape))
+    values = []
+    for i, (boff, blen, soff, slen, crc) in enumerate(entries):
+        bins_b = blob[data_off + boff : data_off + boff + blen]
+        sub_b = blob[data_off + soff : data_off + soff + slen]
+        assert zlib.crc32(sub_b, zlib.crc32(bins_b)) & 0xFFFFFFFF == crc, i
+        bins = decode_rze_section(bins_b, tile_elems, "delta")
+        subs = (decode_rze_section(sub_b, tile_elems, "raw") if order
+                else np.zeros_like(bins))
+        values.append(dequantize(bins, subs, eps_abs, dtype))
+    out = _assemble(values, tile_shape, grid, shape, dtype)
+    if flags & FLAG_HAS_NONFINITE:
+        off, n = extras[TAG_NONFINITE]
+        out = _apply_nonfinite(blob[data_off + off : data_off + off + n], out)
+    return out
+
+
+def _parse_frame_payload(payload: bytes, n_tiles: int):
+    r = R(payload)
+    assert r.take("I") == n_tiles
+    lens = [r.take("QQ") for _ in range(n_tiles)]
+    nf_len = r.take("Q")
+    tiles = [(r.raw(bl), r.raw(sl)) for bl, sl in lens]
+    nonfinite = r.raw(nf_len)
+    assert r.off == len(payload)
+    return tiles, nonfinite
+
+
+def spec_decode_v3(blob: bytes) -> np.ndarray:
+    r = R(blob)
+    version, flags, dtype, shape, _mode, _eb, eps_abs = _header(r)
+    assert version == VERSION_CHAIN
+    tile_shape = r.take("QQQ")
+    grid = r.take("QQQ")
+    n_frames, _interval, n_tiles, n_extra = r.take("IIIB")
+    assert n_tiles == int(np.prod(grid))
+    assert n_extra == 0  # no chain-level extras defined
+    entries = [r.take(FRAME_ENTRY.lstrip("<")) for _ in range(n_frames)]
+    assert r.take("I") == zlib.crc32(blob[: r.off - 4]) & 0xFFFFFFFF
+    data_off = r.off
+    assert entries[0][0] == FRAME_KEY
+
+    order = bool(flags & FLAG_ORDER_PRESERVING)
+    tile_elems = int(np.prod(tile_shape))
+    frames = []
+    bins = None   # accumulated per-tile bin streams (list of arrays)
+    for t, (kind, fflags, off, length, crc) in enumerate(entries):
+        payload = blob[data_off + off : data_off + off + length]
+        assert zlib.crc32(payload) & 0xFFFFFFFF == crc, t
+        tiles, nonfinite = _parse_frame_payload(payload, n_tiles)
+        if kind == FRAME_KEY:
+            bins = [decode_rze_section(b, tile_elems, "delta")
+                    for b, _ in tiles]
+        else:
+            assert kind == FRAME_RESIDUAL
+            res = [decode_rze_section(b, tile_elems, "zigzag")
+                   for b, _ in tiles]
+            bins = [p.astype(np.int64) + q.astype(np.int64)
+                    for p, q in zip(bins, res)]
+        values = []
+        for i, (_, sub_b) in enumerate(tiles):
+            subs = (decode_rze_section(sub_b, tile_elems, "raw") if order
+                    else np.zeros(tile_elems, np.int64))
+            values.append(dequantize(np.asarray(bins[i]), subs, eps_abs,
+                                     dtype))
+        out = _assemble(values, tile_shape, grid, shape, dtype)
+        if fflags & FLAG_HAS_NONFINITE:
+            out = _apply_nonfinite(nonfinite, out)
+        frames.append(out)
+    return np.stack(frames)
+
+
+# --------------------------------------------------------------- tests
+
+EXPECTED = np.load(DATA / "expected.npz")
+
+
+@pytest.mark.parametrize("name", ["v2", "v2_wide"])
+def test_spec_decodes_committed_v2_fixture(name):
+    fname = "fixture_v2.lopc" if name == "v2" else "fixture_v2_wide.lopc"
+    blob = (DATA / fname).read_bytes()
+    out = spec_decode_v2(blob)
+    want = EXPECTED[name]
+    assert out.dtype == want.dtype and out.shape == want.shape
+    assert np.array_equal(out, want, equal_nan=True)
+
+
+def test_spec_decode_matches_library_v2():
+    from repro import engine
+
+    blob = (DATA / "fixture_v2.lopc").read_bytes()
+    assert np.array_equal(spec_decode_v2(blob), engine.decompress(blob),
+                          equal_nan=True)
+
+
+def test_spec_decodes_committed_v3_fixture():
+    blob = (DATA / "fixture_v3.lopc").read_bytes()
+    out = spec_decode_v3(blob)
+    want = EXPECTED["v3"]
+    assert out.dtype == want.dtype and out.shape == want.shape
+    assert np.array_equal(out, want, equal_nan=True)
+
+
+def test_spec_decode_matches_library_v3():
+    from repro import temporal
+
+    blob = (DATA / "fixture_v3.lopc").read_bytes()
+    assert np.array_equal(spec_decode_v3(blob),
+                          temporal.decompress_chain(blob), equal_nan=True)
+
+
+def test_spec_decoder_is_independent_of_fixture_generation(rng):
+    """The spec decoder also handles freshly written containers (not
+    just the committed bytes): 1/2/3-D, both dtypes, both orders."""
+    from repro import engine
+
+    for shape in ((40,), (14, 11), (9, 8, 7)):
+        for dtype in (np.float32, np.float64):
+            x = rng.standard_normal(shape).astype(dtype)
+            for order in (True, False):
+                blob = engine.compress(x, 1e-2, preserve_order=order)
+                assert np.array_equal(spec_decode_v2(blob),
+                                      engine.decompress(blob)), (shape, dtype)
