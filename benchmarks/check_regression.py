@@ -20,12 +20,23 @@ marks as gating must beat the committed floor outright — the standing
 claim that chains beat per-frame snapshot compression on
 time-correlated data by a real margin, not a rounding error.
 
+``--store`` gates a fresh ``BENCH_store.json`` against
+``benchmarks/baselines/store_baseline.json``: per-workload decode
+counts are deterministic and must not grow (a cold region read decodes
+exactly the tiles overlapping the region — strictly fewer than the
+array holds — and a cached re-read decodes zero), the service-batched
+decoded-tiles-per-request must not grow (batching must keep
+deduplicating concurrent readers' misses), and the fresh run's cached
+read must beat its own cold read outright — a cache that decodes
+nothing yet loses on latency is broken caching on any machine.
+
 Throughput numbers are deliberately NOT gated: CI machines are shared
 and MB/s is noise there; the bench still records it for trajectory.
 
   PYTHONPATH=src python -m benchmarks.check_regression
   PYTHONPATH=src python -m benchmarks.check_regression --update-baseline
   PYTHONPATH=src python -m benchmarks.check_regression --temporal
+  PYTHONPATH=src python -m benchmarks.check_regression --store
 
 ``--update-baseline`` rewrites the baseline from the current bench
 output (run after an intentional ratio/transfer change, commit the
@@ -47,6 +58,12 @@ TEMPORAL_BENCH_PATH = (
 )
 TEMPORAL_BASELINE_PATH = (
     Path(__file__).resolve().parent / "baselines" / "temporal_baseline.json"
+)
+STORE_BENCH_PATH = (
+    Path(__file__).resolve().parent / "results" / "BENCH_store.json"
+)
+STORE_BASELINE_PATH = (
+    Path(__file__).resolve().parent / "baselines" / "store_baseline.json"
 )
 
 RATIO_TOL = 0.01
@@ -164,6 +181,79 @@ def check_temporal(baseline: dict, bench: dict,
     return problems
 
 
+def extract_store_baseline(bench: dict) -> dict:
+    """The gated (deterministic) slice of a BENCH_store.json report."""
+    return {
+        "eb": bench["eb"],
+        "mode": bench["mode"],
+        "tile_shape": bench["tile_shape"],
+        "roi_extent": bench["roi_extent"],
+        "workloads": {
+            name: {
+                "tiles_total": row["tiles_total"],
+                "decoded_tiles_cold": row["decoded_tiles_cold"],
+                "decoded_tiles_cached": row["decoded_tiles_cached"],
+            }
+            for name, row in bench["workloads"].items()
+        },
+        "batched": {
+            "decoded_tiles_per_request":
+                bench["batched"]["decoded_tiles_per_request"],
+        },
+    }
+
+
+def check_store(baseline: dict, bench: dict,
+                ratio_tol: float = RATIO_TOL) -> list[str]:
+    """-> list of violations (empty means the store gate passes)."""
+    problems = []
+    for key in ("eb", "mode", "tile_shape", "roi_extent"):
+        if bench.get(key) != baseline.get(key):
+            problems.append(
+                f"bench config drifted: {key}={bench.get(key)!r} vs "
+                f"baseline {baseline.get(key)!r}"
+            )
+    for name, base in baseline["workloads"].items():
+        row = bench["workloads"].get(name)
+        if row is None:
+            problems.append(f"{name}: workload missing from bench output")
+            continue
+        cold = row["decoded_tiles_cold"]
+        if cold > base["decoded_tiles_cold"]:
+            problems.append(
+                f"{name}: cold region read decoded {cold} tiles "
+                f"(baseline {base['decoded_tiles_cold']}) — reads are no "
+                "longer tile-addressable"
+            )
+        if cold >= row["tiles_total"]:
+            problems.append(
+                f"{name}: cold region read decoded every tile "
+                f"({cold}/{row['tiles_total']}) — a region read must "
+                "decode a strict subset"
+            )
+        if row["decoded_tiles_cached"] > base["decoded_tiles_cached"]:
+            problems.append(
+                f"{name}: cached re-read decoded "
+                f"{row['decoded_tiles_cached']} tiles (baseline "
+                f"{base['decoded_tiles_cached']}) — the decoded-tile "
+                "cache stopped short-circuiting the decode"
+            )
+        if row["cached_speedup"] <= 1.0:
+            problems.append(
+                f"{name}: cached read ({row['cached_roi_ms']:.3f} ms) did "
+                f"not beat the cold read ({row['cold_roi_ms']:.3f} ms)"
+            )
+    got = bench["batched"]["decoded_tiles_per_request"]
+    limit = baseline["batched"]["decoded_tiles_per_request"]
+    if got > limit * (1.0 + ratio_tol):
+        problems.append(
+            f"service-batched reads decoded {got:.3f} tiles/request "
+            f"(baseline {limit:.3f}) — concurrent readers' misses are no "
+            "longer deduplicated into shared decodes"
+        )
+    return problems
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--bench", type=Path, default=None)
@@ -172,17 +262,28 @@ def main(argv=None) -> int:
     ap.add_argument("--temporal", action="store_true",
                     help="gate BENCH_temporal.json (chain-vs-snapshot "
                          "wins) instead of BENCH_engine.json")
+    ap.add_argument("--store", action="store_true",
+                    help="gate BENCH_store.json (tile-addressable reads, "
+                         "decoded-tile cache) instead of BENCH_engine.json")
     ap.add_argument("--update-baseline", action="store_true",
                     help="rewrite the baseline from the current bench output")
     args = ap.parse_args(argv)
+    if args.temporal and args.store:
+        ap.error("--temporal and --store are mutually exclusive")
     if args.bench is None:
-        args.bench = TEMPORAL_BENCH_PATH if args.temporal else BENCH_PATH
+        args.bench = (TEMPORAL_BENCH_PATH if args.temporal
+                      else STORE_BENCH_PATH if args.store else BENCH_PATH)
     if args.baseline is None:
         args.baseline = (TEMPORAL_BASELINE_PATH if args.temporal
+                         else STORE_BASELINE_PATH if args.store
                          else BASELINE_PATH)
-    extract = extract_temporal_baseline if args.temporal else extract_baseline
-    gate = check_temporal if args.temporal else check
-    label = "temporal" if args.temporal else "bench"
+    extract = (extract_temporal_baseline if args.temporal
+               else extract_store_baseline if args.store
+               else extract_baseline)
+    gate = (check_temporal if args.temporal
+            else check_store if args.store else check)
+    label = ("temporal" if args.temporal
+             else "store" if args.store else "bench")
 
     bench = json.loads(args.bench.read_text())
     if args.update_baseline:
@@ -205,6 +306,11 @@ def main(argv=None) -> int:
               f"{len(baseline['sequences'])} sequences within "
               f"{args.ratio_tol:.1%} of committed wins, {n_gate} above the "
               f"{baseline.get('floor', TEMPORAL_WIN_FLOOR):g}x floor")
+    elif args.store:
+        print(f"store regression gate passed: "
+              f"{len(baseline['workloads'])} workloads tile-addressable, "
+              f"cached reads decode nothing and beat cold, batched "
+              f"decoded-tiles/request within bounds")
     else:
         n = len(baseline["fields"])
         print(f"bench regression gate passed: {n} fields within "

@@ -14,7 +14,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="table3|table45|table67|fig3|fig4|table89|engine|"
-                         "service|temporal|roofline")
+                         "service|temporal|store|roofline")
     args = ap.parse_args()
 
     from . import (  # noqa: WPS433
@@ -23,6 +23,7 @@ def main() -> None:
         fig4_binsplit,
         roofline,
         service_bench,
+        store_bench,
         table3_preservation,
         table45_topo,
         table67_nontopo,
@@ -41,6 +42,7 @@ def main() -> None:
         "engine": engine_bench.run,
         "service": service_bench.run,
         "temporal": temporal_bench.run,
+        "store": store_bench.run,
     }
     t0 = time.time()
     inputs = load_inputs()

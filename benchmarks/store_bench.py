@@ -1,0 +1,185 @@
+"""Store read-path benchmark: cold vs cached ROI reads, decode counts.
+
+Builds a throwaway ``LopcStore`` from generator fields and measures the
+two numbers the subsystem exists for:
+
+  * **cold ROI latency** — region read with a cold decoded-tile cache
+    (device programs warm, so this is disk seek + tile decode, not jit
+    tracing), next to the tiles it decoded (``executor.DECODE_COUNTS``
+    delta — must equal the tiles overlapping the region, a strict
+    subset of the array);
+  * **cached ROI latency** — the same region again: every tile hits the
+    decoded-tile LRU, zero tiles decode, and the read collapses to
+    cache lookups + host assembly.
+
+Plus a service-batched point: concurrent readers of overlapping
+regions through ``CompressionService.submit_store_roi``, reporting
+decoded-tiles-per-request (deduplicated misses / requests — below the
+per-request tile count exactly when batching shares decodes).
+
+Latency is measured best-of-N; the regression gate
+(``check_regression.py --store``) checks the *deterministic* decode
+counts against the committed baseline and requires cached < cold from
+the fresh run itself (a cache that decodes nothing but loses to a cold
+read would be broken caching, whatever the machine).
+
+  PYTHONPATH=src python -m benchmarks.run --only store
+"""
+from __future__ import annotations
+
+import json
+import platform
+import shutil
+import tempfile
+import time
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro import engine
+from repro.data.fields import make_scientific_field
+from repro.engine.executor import DECODE_COUNTS
+from repro.service import CompressionService, ServiceConfig
+from repro.store import LopcStore
+
+from .common import emit
+
+OUT_PATH = Path(__file__).resolve().parent / "results" / "BENCH_store.json"
+
+PLAN = engine.CompressionPlan(tile_shape=(16, 16, 64), batch_tiles=8)
+EB = 1e-2
+REPEATS = 5
+ROI_EXTENT = 16  # region edge length, deliberately tile-straddling
+
+WORKLOADS = [
+    ("gaussians", (64, 64, 48), "float32"),
+    ("turbulence", (64, 64, 48), "float32"),
+    ("waves", (48, 48, 48), "float64"),
+]
+
+# service-batched point: concurrent readers over two overlapping regions
+BATCH_CLIENTS = 6
+
+
+def _best_of(fn, repeats=REPEATS):
+    out, times = None, []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn()
+        times.append(time.perf_counter() - t0)
+    return out, min(times)
+
+
+def _roi_for(shape):
+    return tuple(slice(10, 10 + min(ROI_EXTENT, n - 10)) for n in shape)
+
+
+def run(inputs=None) -> dict:
+    del inputs  # generated fields; the committed counts are what gates
+    root = tempfile.mkdtemp(prefix="lopc-store-bench-")
+    store = None
+    rows = []
+    report = {
+        "eb": EB,
+        "mode": "noa",
+        "tile_shape": list(PLAN.tile_shape),
+        "roi_extent": ROI_EXTENT,
+        "repeats": REPEATS,
+        "backend": jax.default_backend(),
+        "platform": platform.platform(),
+        "workloads": {},
+        "batched": {},
+    }
+    try:
+        store = LopcStore.create(root, plan=PLAN)
+        for base, shape, dtype in WORKLOADS:
+            name = f"{base}/{dtype}"
+            x = make_scientific_field(base, shape, np.dtype(dtype), seed=13)
+            store.write(base, x, EB)
+            roi = _roi_for(shape)
+            info = store.info(base)
+
+            # warm the decode programs on a different region, then drop
+            # the cache so "cold" means cold cache, not cold jit
+            store.read_roi(base, tuple(slice(0, 8) for _ in shape))
+            store.cache.clear()
+            d0 = DECODE_COUNTS["tiles"]
+            cold_out, t_cold = _best_of(
+                lambda: (store.cache.clear(),
+                         store.read_roi(base, roi))[1])
+            tiles_cold = (DECODE_COUNTS["tiles"] - d0) // REPEATS
+
+            d0 = DECODE_COUNTS["tiles"]
+            cached_out, t_cached = _best_of(lambda: store.read_roi(base, roi))
+            tiles_cached = DECODE_COUNTS["tiles"] - d0
+            assert np.array_equal(cold_out, cached_out), name
+            blob = (store.root / info["payload"]).read_bytes()
+            assert np.array_equal(cached_out,
+                                  engine.decompress(blob, plan=PLAN)[roi])
+
+            entry = {
+                "shape": list(shape),
+                "dtype": dtype,
+                "tiles_total": info["n_tiles"],
+                "decoded_tiles_cold": tiles_cold,
+                "decoded_tiles_cached": int(tiles_cached),
+                "cold_roi_ms": t_cold * 1e3,
+                "cached_roi_ms": t_cached * 1e3,
+                "cached_speedup": t_cold / t_cached,
+            }
+            report["workloads"][name] = entry
+            rows.append((f"store_roi_cold[{name}]", t_cold,
+                         f"{tiles_cold}/{info['n_tiles']} tiles decoded"))
+            rows.append((f"store_roi_cached[{name}]", t_cached,
+                         f"{entry['cached_speedup']:.1f}x over cold, "
+                         f"{tiles_cached} tiles decoded"))
+
+        # service-batched: concurrent readers, overlapping regions —
+        # cache-miss tiles deduplicate across the batch
+        store.cache.clear()
+        cfg = ServiceConfig(plan=PLAN, max_delay_ms=25.0)
+        base, shape, _ = WORKLOADS[0]
+        rois = [_roi_for(shape),
+                tuple(slice(14, 14 + ROI_EXTENT) for _ in shape)]
+        svc = CompressionService(cfg, autostart=False)
+        futs = [svc.submit_store_roi(store, base, rois[i % len(rois)])
+                for i in range(BATCH_CLIENTS)]
+        d0 = DECODE_COUNTS["tiles"]
+        t0 = time.perf_counter()
+        svc.start()
+        outs = [f.result(timeout=600) for f in futs]
+        t_batch = time.perf_counter() - t0
+        svc.stop()
+        m = svc.metrics()
+        blob = (store.root / store.info(base)["payload"]).read_bytes()
+        full = engine.decompress(blob, plan=PLAN)
+        for i, out in enumerate(outs):
+            assert np.array_equal(out, full[rois[i % len(rois)]])
+        report["batched"] = {
+            "clients": BATCH_CLIENTS,
+            "distinct_regions": len(rois),
+            "decoded_tiles_total": DECODE_COUNTS["tiles"] - d0,
+            "decoded_tiles_per_request": m.decoded_tiles_per_request,
+            "cache_hits": m.cache_hits,
+            "cache_misses": m.cache_misses,
+            "wall_ms": t_batch * 1e3,
+        }
+        rows.append(("store_roi_service_batched", t_batch,
+                     f"{BATCH_CLIENTS} readers, "
+                     f"{m.decoded_tiles_per_request:.2f} decoded "
+                     "tiles/request"))
+    finally:
+        if store is not None:
+            store.close()
+        shutil.rmtree(root, ignore_errors=True)
+
+    OUT_PATH.parent.mkdir(parents=True, exist_ok=True)
+    OUT_PATH.write_text(json.dumps(report, indent=1) + "\n")
+    emit(rows, "store cold vs cached ROI reads")
+    print(f"# wrote {OUT_PATH}")
+    return report
+
+
+if __name__ == "__main__":
+    run()

@@ -72,7 +72,9 @@ RZE section payload:
 """
 from __future__ import annotations
 
+import os
 import struct
+import threading
 import zlib
 from dataclasses import dataclass
 
@@ -151,6 +153,79 @@ class Reader:
 
     def lp(self) -> bytes:
         return self.raw(self.unpack("Q"))
+
+
+# ------------------------------------------------------------ byte sources
+#
+# Containers parse a small head (header + index) and then slice tile /
+# frame payloads lazily.  The slicing goes through a *byte source* so the
+# same reader works over an in-memory blob and over a file on disk (the
+# store's payload files): a ``bytes`` object is a valid source as-is, and
+# :class:`FileSource` provides positional reads that never load the full
+# payload (the tile-addressable read path of ``repro.store``).
+
+class FileSource:
+    """Positional (pread-style) byte source over a file.
+
+    Reads are stateless per call — ``os.pread`` where available, a
+    locked seek+read otherwise — so one source may serve concurrent
+    readers.  ``bytes_read`` counts payload bytes actually fetched,
+    the probe tests use to assert partial reads stay partial.
+    """
+
+    def __init__(self, path):
+        self.path = str(path)
+        self._fd = os.open(self.path, os.O_RDONLY)
+        self._lock = threading.Lock()
+        self.bytes_read = 0
+
+    def pread(self, off: int, n: int) -> bytes:
+        if n <= 0:
+            return b""
+        if hasattr(os, "pread"):
+            b = os.pread(self._fd, n, off)
+        else:  # pragma: no cover - non-POSIX fallback
+            with self._lock:
+                os.lseek(self._fd, off, os.SEEK_SET)
+                b = os.read(self._fd, n)
+        with self._lock:  # counter only; the read itself is stateless
+            self.bytes_read += len(b)
+        return b
+
+    def size(self) -> int:
+        return os.fstat(self._fd).st_size
+
+    def close(self) -> None:
+        if self._fd is not None:
+            os.close(self._fd)
+            self._fd = None
+
+    def __enter__(self) -> "FileSource":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def __del__(self):  # best-effort; close() is the real API
+        try:
+            if getattr(self, "_fd", None) is not None:
+                os.close(self._fd)
+        except OSError:  # pragma: no cover
+            pass
+        self._fd = None
+
+
+def _source_slice(source, off: int, n: int) -> bytes:
+    """Slice ``n`` bytes at ``off`` out of a bytes-or-FileSource."""
+    if isinstance(source, (bytes, bytearray, memoryview)):
+        return bytes(source[off : off + n])
+    return source.pread(off, n)
+
+
+def _source_size(source) -> int:
+    if isinstance(source, (bytes, bytearray, memoryview)):
+        return len(source)
+    return source.size()
 
 
 # ------------------------------------------------------------- RZE section
@@ -364,10 +439,13 @@ def write_container_v2(
 
 @dataclass
 class ContainerV2:
-    """Parsed v2 container: header + tile index over a zero-copy blob.
+    """Parsed v2 container: header + tile index over a lazy byte source.
 
     Tile payloads are sliced (and crc-verified) lazily, so a reader can
     decode any subset of tiles — the basis of parallel and ROI decode.
+    ``source`` is either the original blob bytes or a :class:`FileSource`
+    (see ``open_container_v2``): a file-backed reader fetches only the
+    head plus the payload bytes of the tiles actually decoded.
     """
 
     header: Header
@@ -376,15 +454,14 @@ class ContainerV2:
     entries: list[TileEntry]
     extra: dict[int, tuple[int, int]]
     data_off: int
-    blob: bytes
+    source: bytes | FileSource
 
     @property
     def n_tiles(self) -> int:
         return len(self.entries)
 
     def _slice(self, off: int, n: int) -> bytes:
-        lo = self.data_off + off
-        b = self.blob[lo : lo + n]
+        b = _source_slice(self.source, self.data_off + off, n)
         if len(b) != n:
             raise ValueError("truncated stream")
         return b
@@ -420,8 +497,11 @@ class ContainerV2:
         return int(bins_w), int(sub_w)
 
 
-def read_container_v2(blob: bytes) -> ContainerV2:
-    r = Reader(blob)
+def _parse_container_v2(head: bytes, total: int, source) -> ContainerV2:
+    """Parse a v2 head (``head`` must cover header + index) and bind the
+    resulting reader to ``source`` for lazy payload slicing; ``total`` is
+    the full container length, for the data-area bound check."""
+    r = Reader(head)
     if r.raw(4) != MAGIC:
         raise ValueError("not an LOPC container")
     version, flags, dtc, ndim = r.unpack("BBBB")
@@ -449,7 +529,7 @@ def read_container_v2(blob: bytes) -> ContainerV2:
             raise ValueError(f"unknown v2 section tag {tag}")
         extra[tag] = (off, n)
     entries = [TileEntry(*r.unpack(_TILE_ENTRY_FMT)) for _ in range(n_tiles)]
-    head_crc_expected = zlib.crc32(blob[: r.off]) & 0xFFFFFFFF
+    head_crc_expected = zlib.crc32(head[: r.off]) & 0xFFFFFFFF
     if r.unpack("I") != head_crc_expected:
         raise ValueError("corrupt LOPC container (index crc mismatch)")
     data_off = r.off
@@ -460,10 +540,47 @@ def read_container_v2(blob: bytes) -> ContainerV2:
         + [off + n for off, n in extra.values()]
         + [0]
     )
-    if data_off + end > len(blob):
+    if data_off + end > total:
         raise ValueError("truncated stream")
     header = Header(CODES_DTYPE[dtc], shape, eb_mode, eb, eps_abs, flags)
-    return ContainerV2(header, tile_shape, grid, entries, extra, data_off, blob)
+    return ContainerV2(header, tile_shape, grid, entries, extra, data_off,
+                       source)
+
+
+def read_container_v2(blob: bytes) -> ContainerV2:
+    return _parse_container_v2(blob, len(blob), blob)
+
+
+# The head of a tiled container is header + extras dir + tile index —
+# small (36 bytes per tile) but not fixed-size, so a file-backed open
+# probes a prefix and grows it geometrically until the index parses.
+# 4 KiB covers ~110 tiles in one read without swallowing small payload
+# files whole (partial reads must stay partial even for small arrays).
+_HEAD_PROBE = 4096
+
+
+def open_container_v2(source: FileSource) -> ContainerV2:
+    """Parse a v2 container over a positional byte source.
+
+    Only the head (header + tile index) is fetched here; tile payloads
+    are read on demand via ``tile_payloads`` — a region-of-interest
+    decode of a stored container touches the head plus exactly the
+    payload byte ranges of the tiles it needs.
+    """
+    total = _source_size(source)
+    head = _source_slice(source, 0, min(_HEAD_PROBE, total))
+    while True:
+        try:
+            return _parse_container_v2(head, total, source)
+        except ValueError as e:
+            # grow the probe only when the head itself ran short; a
+            # corrupt head (bad magic, crc mismatch, unknown tag) raises
+            # the same error however much of the file we fetch.  Growth
+            # fetches only the missing suffix — never re-reads bytes.
+            if len(head) >= total or str(e) != "truncated stream":
+                raise
+            n = min(len(head) * 4, total)
+            head += _source_slice(source, len(head), n - len(head))
 
 
 # ---------------------------------------------------------- container v3
@@ -578,11 +695,14 @@ def write_container_v3(
 
 @dataclass
 class ContainerV3:
-    """Parsed v3 chain: header + frame index over a zero-copy blob.
+    """Parsed v3 chain: header + frame index over a lazy byte source.
 
     Frame payloads are sliced (and crc-verified) lazily, so a reader can
     decode any frame run — the basis of ``decompress_frame``'s
-    keyframe-bounded random access.
+    keyframe-bounded random access.  Like :class:`ContainerV2`, the
+    ``source`` may be the blob bytes or a :class:`FileSource`; the store
+    layer additionally builds these views directly from its manifest
+    (frame index in json, payload file as the data area, ``data_off=0``).
     """
 
     header: Header
@@ -592,7 +712,7 @@ class ContainerV3:
     entries: list[FrameEntry]
     extra: dict[int, tuple[int, int]]
     data_off: int
-    blob: bytes
+    source: bytes | FileSource
 
     @property
     def n_frames(self) -> int:
@@ -604,8 +724,7 @@ class ContainerV3:
 
     def frame_payload(self, t: int) -> bytes:
         e = self.entries[t]
-        lo = self.data_off + e.off
-        b = self.blob[lo : lo + e.length]
+        b = _source_slice(self.source, self.data_off + e.off, e.length)
         if len(b) != e.length:
             raise ValueError("truncated stream")
         if (zlib.crc32(b) & 0xFFFFFFFF) != e.crc:

@@ -26,12 +26,16 @@ from .engine import (
     CompressStats,
     compress,
     compress_many,
+    container_layout,
+    decode_tiles_for_region,
+    decode_tiles_many,
     decompress,
     decompress_many,
     decompress_roi,
+    region_from_tiles,
 )
 from .executor import Executor
-from .plan import CompressionPlan, TileLayout
+from .plan import CompressionPlan, TileLayout, tiles_for_region
 from . import device, executor, halo
 
 __all__ = [
@@ -41,9 +45,14 @@ __all__ = [
     "Executor",
     "compress",
     "compress_many",
+    "container_layout",
+    "decode_tiles_for_region",
+    "decode_tiles_many",
     "decompress",
     "decompress_many",
     "decompress_roi",
+    "region_from_tiles",
+    "tiles_for_region",
     "device",
     "executor",
     "halo",

@@ -326,16 +326,6 @@ def compress(field, eb, mode="noa", preserve_order=True, solver="auto",
 
 # ------------------------------------------------------------ decompress
 
-def _decode_tile_batch(c: bitstream.ContainerV2, tile_ids, layout, plan):
-    """Decode a set of one container's tiles -> values (n, *tile)."""
-    order = bool(c.header.flags & FLAG_ORDER_PRESERVING)
-    eps_eff = effective_eps(c.header.eps_abs)
-    items = [(c, t, eps_eff) for t in tile_ids]
-    return default_executor(plan, "auto").decode_items(
-        items, layout.tile, c.header.dtype, order, c.stream_words()
-    )
-
-
 def container_layout(c) -> TileLayout:
     """TileLayout of a parsed tiled container (v2 snapshot or v3 chain —
     both expose header/tile_shape/grid/n_tiles), validating that the
@@ -350,6 +340,92 @@ def container_layout(c) -> TileLayout:
     return layout
 
 
+def _as_container(reader) -> bitstream.ContainerV2:
+    """Accept a parsed v2 reader or raw blob bytes (the blob caller)."""
+    if isinstance(reader, (bytes, bytearray, memoryview)):
+        return bitstream.read_container_v2(bytes(reader))
+    return reader
+
+
+def _decode_runs(runs, plan, group_cb=None):
+    """Decode a list of tile runs sharing device batches across readers.
+
+    ``runs`` holds ``(container, layout, tile_ids)`` triples; tiles of
+    every run with one (dtype, tile_shape, order, section words)
+    signature ride the same fixed-shape device batches — the shared
+    grouping under ``decompress_many``, ``decompress_roi``, and the
+    store's batched reads.  Returns one ``(len(tile_ids), *tile)`` value
+    array per run.  ``group_cb`` mirrors :func:`compress_many`'s
+    per-device-group reporting hook.
+    """
+    groups: dict[tuple, list[int]] = {}
+    for i, (c, layout, tile_ids) in enumerate(runs):
+        if not tile_ids:
+            continue
+        order = bool(c.header.flags & FLAG_ORDER_PRESERVING)
+        groups.setdefault((np.dtype(c.header.dtype), layout.tile, order,
+                           c.stream_words()), []).append(i)
+    outs: list[np.ndarray | None] = [
+        np.empty((0,) + tuple(layout.tile), np.dtype(c.header.dtype))
+        for c, layout, _ in runs
+    ]
+    ex = default_executor(plan, "auto")
+    for (dtype, tile, order, words), members in groups.items():
+        if group_cb is not None:
+            group_cb({
+                "kind": "decompress", "dtype": str(dtype), "tile": tile,
+                "n_requests": len(members),
+                "n_tiles": sum(len(runs[i][2]) for i in members),
+            })
+        items, spans = [], []
+        for i in members:
+            c, layout, tile_ids = runs[i]
+            eps_eff = effective_eps(c.header.eps_abs)
+            start = len(items)
+            items.extend((c, t, eps_eff) for t in tile_ids)
+            spans.append((i, start, len(items)))
+        values = ex.decode_items(items, tile, dtype, order, words)
+        for i, lo, hi in spans:
+            outs[i] = values[lo:hi]
+    return outs
+
+
+def decode_tiles_for_region(reader, tile_ids,
+                            plan: CompressionPlan | None = None) -> np.ndarray:
+    """Tile-granular decode entry point -> values ``(len(tile_ids), *tile)``.
+
+    ``reader`` is a parsed :class:`~repro.core.bitstream.ContainerV2`
+    over any byte source (in-memory blob, ``FileSource`` into a store
+    payload file) or raw blob bytes.  Decodes exactly the requested
+    tiles — the shared primitive behind ``decompress_roi``, the store's
+    ``read_roi``, and the service's batched store reads; the
+    ``executor.DECODE_COUNTS`` probe counts every tile that passes
+    through here.
+    """
+    plan = plan or DEFAULT_PLAN
+    c = _as_container(reader)
+    layout = container_layout(c)
+    return _decode_runs([(c, layout, list(tile_ids))], plan)[0]
+
+
+def decode_tiles_many(runs, plan: CompressionPlan | None = None,
+                      group_cb=None) -> list[np.ndarray]:
+    """Batched form of :func:`decode_tiles_for_region`.
+
+    ``runs`` is a list of ``(reader, tile_ids)`` pairs; tiles of all
+    runs sharing one (dtype, tile, order, words) signature are decoded
+    in shared device batches, exactly like ``decompress_many`` coalesces
+    full decodes.  The store's ``read_roi_many`` rides this to batch
+    cache-miss tiles across concurrent readers.
+    """
+    plan = plan or DEFAULT_PLAN
+    parsed = []
+    for reader, tile_ids in runs:
+        c = _as_container(reader)
+        parsed.append((c, container_layout(c), list(tile_ids)))
+    return _decode_runs(parsed, plan, group_cb)
+
+
 def decompress(blob: bytes, plan: CompressionPlan | None = None) -> np.ndarray:
     """Reconstruct a full field from a v2 container.
 
@@ -360,7 +436,7 @@ def decompress(blob: bytes, plan: CompressionPlan | None = None) -> np.ndarray:
     plan = plan or DEFAULT_PLAN
     c = bitstream.read_container_v2(blob)
     layout = container_layout(c)
-    values = _decode_tile_batch(c, list(range(layout.n_tiles)), layout, plan)
+    values = _decode_runs([(c, layout, list(range(layout.n_tiles)))], plan)[0]
     return _assemble_field(values, c, layout)
 
 
@@ -394,33 +470,11 @@ def decompress_many(blobs, plan: CompressionPlan | None = None,
     parsed = []
     for b in blobs:
         c = bitstream.read_container_v2(b)
-        parsed.append((c, container_layout(c)))
-    groups: dict[tuple, list[int]] = {}
-    for i, (c, layout) in enumerate(parsed):
-        order = bool(c.header.flags & FLAG_ORDER_PRESERVING)
-        groups.setdefault((np.dtype(c.header.dtype), layout.tile, order,
-                           c.stream_words()), []).append(i)
-    outs: list[np.ndarray | None] = [None] * len(parsed)
-    ex = default_executor(plan, "auto")
-    for (dtype, tile, order, words), members in groups.items():
-        if group_cb is not None:
-            group_cb({
-                "kind": "decompress", "dtype": str(dtype), "tile": tile,
-                "n_requests": len(members),
-                "n_tiles": sum(parsed[i][1].n_tiles for i in members),
-            })
-        items, spans = [], []
-        for i in members:
-            c, layout = parsed[i]
-            eps_eff = effective_eps(c.header.eps_abs)
-            start = len(items)
-            items.extend((c, t, eps_eff) for t in range(layout.n_tiles))
-            spans.append((i, start, len(items)))
-        values = ex.decode_items(items, tile, dtype, order, words)
-        for i, lo, hi in spans:
-            c, layout = parsed[i]
-            outs[i] = _assemble_field(values[lo:hi], c, layout)
-    return outs
+        layout = container_layout(c)
+        parsed.append((c, layout, list(range(layout.n_tiles))))
+    values = _decode_runs(parsed, plan, group_cb)
+    return [_assemble_field(v, c, layout)
+            for v, (c, layout, _) in zip(values, parsed)]
 
 
 def decompress_roi(blob: bytes, region: tuple[slice, ...],
@@ -439,13 +493,33 @@ def decompress_roi(blob: bytes, region: tuple[slice, ...],
     from the sidecar.
 
     Touches exactly the tiles intersecting the region (the v2 index
-    makes them addressable without scanning the stream).
+    makes them addressable without scanning the stream).  A v3 *chain*
+    blob is detected by version: a single-frame chain routes through
+    ``temporal.decompress_frame(0)`` (its one frame is a snapshot in
+    all but framing), a multi-frame chain raises a ValueError naming
+    the container version — pick a frame first.
     """
     plan = plan or DEFAULT_PLAN
+    if bitstream.container_version(blob) == bitstream.VERSION_CHAIN:
+        return _roi_from_chain(blob, region, plan)
     c = bitstream.read_container_v2(blob)
     layout = container_layout(c)
     tile_ids = tiles_for_region(layout, region)
+    values = decode_tiles_for_region(c, tile_ids, plan)
+    return region_from_tiles(c, layout, region, dict(zip(tile_ids, values)))
+
+
+def region_from_tiles(c, layout: TileLayout, region: tuple[slice, ...],
+                      tiles: dict[int, np.ndarray]) -> np.ndarray:
+    """Assemble ``region`` of a field from decoded tile interiors.
+
+    ``tiles`` maps tile id -> decoded ``(*tile,)`` values and must cover
+    every tile intersecting the region (a mix of freshly decoded and
+    cached interiors — the store's read path — assembles identically to
+    a cold decode).  Region semantics match :func:`decompress_roi`.
+    """
     shape = c.header.shape
+    tile_ids = tiles_for_region(layout, region)  # validates the region
     # empty/reversed slices clamp to zero extent (numpy slicing semantics)
     canon_region = (slice(0, 1),) * (3 - len(region)) + tuple(
         slice(sl.indices(n)[0], max(sl.indices(n)[0], sl.indices(n)[1]))
@@ -456,10 +530,10 @@ def decompress_roi(blob: bytes, region: tuple[slice, ...],
     if not tile_ids or 0 in out_shape:
         return np.empty(final_shape, np.dtype(c.header.dtype))
     out = np.empty(out_shape, np.dtype(c.header.dtype))
-    values = _decode_tile_batch(c, tile_ids, layout, plan)
     g1, g2 = layout.grid[1], layout.grid[2]
     t = layout.tile
-    for v, tid in zip(values, tile_ids):
+    for tid in tile_ids:
+        v = tiles[tid]
         gi, rem = divmod(tid, g1 * g2)
         gj, gk = divmod(rem, g2)
         t0, t1, t2 = gi * t[0], gj * t[1], gk * t[2]
@@ -477,3 +551,23 @@ def decompress_roi(blob: bytes, region: tuple[slice, ...],
             tuple(slice(*sl.indices(n)[:2]) for sl, n in zip(region, shape)),
         )
     return out
+
+
+def _roi_from_chain(blob: bytes, region: tuple[slice, ...],
+                    plan: CompressionPlan) -> np.ndarray:
+    """ROI over a v3 chain blob: decode frame 0 when the chain is a
+    single frame (its sections are a v2 snapshot's), else refuse with
+    the container version spelled out."""
+    from ..temporal import decompress_frame  # lazy: temporal imports engine
+
+    c = bitstream.read_container_v3(blob)
+    if c.n_frames != 1:
+        raise ValueError(
+            f"decompress_roi expects a v2 snapshot container, got a "
+            f"version {bitstream.VERSION_CHAIN} chain with {c.n_frames} "
+            "frames; pick a frame with temporal.decompress_frame first"
+        )
+    layout = container_layout(c)
+    tiles_for_region(layout, region)  # validate slices before decoding
+    full = decompress_frame(blob, 0, plan=plan)
+    return np.ascontiguousarray(full[tuple(region)])

@@ -54,6 +54,14 @@ from .plan import CompressionPlan, TileLayout
 
 TRANSFER_COUNTS: Counter = Counter()
 
+# Decode-work probe, the partial-read analogue of TRANSFER_COUNTS:
+# ``tiles`` counts tile sections actually decoded (every decode path
+# funnels through ``decode_items``), ``batches`` the device batches they
+# rode.  A region read that claims to be tile-addressable proves it here
+# — tests and the store bench assert the delta equals the tiles
+# overlapping the region, and a cache hit adds zero.
+DECODE_COUNTS: Counter = Counter()
+
 _CHUNK_WORDS = {2: 8192, 4: 4096, 8: 2048}  # word bytes -> words / 16 KiB
 
 # Section word widths adapt to the stored values (self-described by the
@@ -69,6 +77,14 @@ CAPACITY_FLOOR = 8
 
 def reset_transfer_counts() -> None:
     TRANSFER_COUNTS.clear()
+
+
+def reset_decode_counts() -> None:
+    DECODE_COUNTS.clear()
+
+
+def decode_count(key: str = "tiles") -> int:
+    return DECODE_COUNTS[key]
 
 
 def transfer_count(*keys: str) -> int:
@@ -215,6 +231,8 @@ class Executor:
             # header flags promise a subbin stream the sections lack
             raise ValueError("corrupt LOPC container (missing subbin stream)")
         n = len(items)
+        DECODE_COUNTS["tiles"] += n
+        DECODE_COUNTS["batches"] += 1
         batch = resident_capacity(n, max(CAPACITY_FLOOR,
                                          self.plan.batch_tiles))
 

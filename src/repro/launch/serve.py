@@ -15,6 +15,16 @@ percentiles, batch occupancy, and transfer counters:
   PYTHONPATH=src python -m repro.launch.serve --compress-service \
       --clients 8 --requests-per-client 6 --eb 1e-2 --tile 16,16,64 \
       --max-delay-ms 5
+
+Store mode — a mixed read/write client pool over a persistent
+``LopcStore`` served through the same service: every client writes its
+own arrays (store writes coalesce into shared compress batches), then
+hammers region reads — cold regions of its own arrays plus a shared hot
+region every client revisits, so the decoded-tile cache's hit counters
+and the decoded-tiles-per-request figure show up in the report:
+
+  PYTHONPATH=src python -m repro.launch.serve --store \
+      --clients 8 --requests-per-client 6 --eb 1e-2 --tile 16,16,64
 """
 from __future__ import annotations
 
@@ -181,6 +191,134 @@ def serve_compression(args):
           f"(backpressure, retried by clients)")
 
 
+def serve_store(args):
+    """Drive a store-backed mixed read/write pool through the service.
+
+    Clients write their own arrays and a shared chain through the
+    service (writes coalesce into shared compress batches + one manifest
+    swap per batch), then issue region reads: each client's own regions
+    (cold, decoded from disk tile-by-tile) and one shared hot region
+    (every client after the first hits the decoded-tile cache).  All
+    reads are verified byte-identical to slicing a direct engine
+    decompress — the cache can change latency, never bytes.
+    """
+    import shutil
+    import tempfile
+
+    from repro import engine
+    from repro.data.fields import make_field_sequence, make_scientific_field
+    from repro.engine.plan import CompressionPlan
+    from repro.service import CompressionService, ServiceConfig, ServiceOverloaded
+    from repro.store import LopcStore
+
+    cfg = ServiceConfig(
+        plan=CompressionPlan(tile_shape=_parse_tile(args.tile),
+                             batch_tiles=args.batch_tiles),
+        solver=args.solver,
+        max_delay_ms=args.max_delay_ms,
+        max_batch_requests=args.max_batch,
+        max_queue=args.max_queue,
+    )
+    root = args.store_dir or tempfile.mkdtemp(prefix="lopc-store-")
+    store = LopcStore(root, create=True, plan=cfg.plan, solver=cfg.solver)
+
+    def submit_retrying(fn, *a):
+        while True:
+            try:
+                return fn(*a)
+            except ServiceOverloaded as e:  # honor retry-after
+                time.sleep(e.retry_after)
+
+    hot_shape = (48, 48, 32)
+    hot = make_scientific_field("turbulence", hot_shape, np.float32, seed=7)
+    hot_roi = tuple(slice(8, 24) for _ in range(3))
+
+    def client(cid: int) -> dict:
+        rng = np.random.default_rng(1000 + cid)
+        names, fields, wfuts = [], [], []
+        for i in range(args.requests_per_client):
+            x = make_scientific_field(
+                ["gaussians", "waves", "front"][i % 3], (32, 32, 24),
+                np.float64 if i % 2 else np.float32, seed=cid * 131 + i,
+            )
+            name = f"c{cid}_f{i}"
+            names.append(name)
+            fields.append(x)
+            wfuts.append(submit_retrying(
+                svc.submit_store_write, store, name, x, args.eb))
+        for f in wfuts:
+            f.result()
+        # reads: one cold region per own array + the shared hot region
+        rois, rfuts = [], []
+        for name, x in zip(names, fields):
+            lo = tuple(int(rng.integers(0, n // 2)) for n in x.shape)
+            roi = tuple(slice(a, min(a + 12, n))
+                        for a, n in zip(lo, x.shape))
+            rois.append((name, roi, x))
+            rfuts.append(submit_retrying(
+                svc.submit_store_roi, store, name, roi))
+        hfut = submit_retrying(svc.submit_store_roi, store, "hot", hot_roi)
+        ffut = submit_retrying(svc.submit_store_frame, store, "evolution",
+                               args.chain_frames - 1)
+        for (name, roi, x), f in zip(rois, rfuts):
+            got = f.result()
+            bound = args.eb * (float(x.max()) - float(x.min()))
+            assert np.abs(x[roi].astype(np.float64)
+                          - got.astype(np.float64)).max() <= bound, name
+        hot_read = hfut.result()
+        last = ffut.result()
+        return {"mb": sum(x.nbytes for x in fields) / 1e6,
+                "rois": rois, "hot_read": hot_read, "frame": last}
+
+    try:
+        with CompressionService(cfg) as svc:
+            svc.submit_store_write(store, "hot", hot, args.eb).result()
+            chain = make_field_sequence("advect", "gaussians", (24, 24, 16),
+                                        args.chain_frames, np.float32, seed=3)
+            store.write_chain("evolution", chain, args.eb)
+            svc.submit_store_roi(store, "hot", hot_roi).result()  # warm
+            m0 = svc.metrics()
+
+            t0 = time.perf_counter()
+            with ThreadPoolExecutor(args.clients) as pool:
+                results = list(pool.map(client, range(args.clients)))
+            wall = time.perf_counter() - t0
+            m = svc.metrics()
+
+        # byte contract, verified off the clock: store reads == slices of
+        # a direct engine decompress of the stored container bytes
+        for r in results:
+            for name, roi, _x in r["rois"]:
+                blob = (store.root / store.info(name)["payload"]).read_bytes()
+                assert np.array_equal(
+                    store.read_roi(name, roi),
+                    engine.decompress(blob, plan=cfg.plan)[roi]), name
+            assert np.array_equal(r["hot_read"], results[0]["hot_read"])
+
+        total_mb = sum(r["mb"] for r in results)
+        print(f"store service: {args.clients} clients x "
+              f"{args.requests_per_client} arrays each + shared hot region "
+              f"+ chain frame reads over {root}")
+        print(f"  completed  {m.completed - m0.completed} requests "
+              f"({total_mb:.2f} MB written) in {wall:.2f}s wall")
+        print(f"  latency    p50 {m.p50_ms:.1f} ms / p99 {m.p99_ms:.1f} ms")
+        print(f"  batching   {m.batches - m0.batches} micro-batches, "
+              f"occupancy mean {m.mean_batch_occupancy:.2f} / "
+              f"max {m.max_batch_occupancy}")
+        print(f"  tile cache {m.cache_hits - m0.cache_hits} hits / "
+              f"{m.cache_misses - m0.cache_misses} misses / "
+              f"{m.cache_evictions - m0.cache_evictions} evictions; "
+              f"{m.decoded_tiles_per_request:.2f} decoded tiles/request")
+        print(f"  store      {len(store.names())} arrays, cache "
+              f"{store.cache.stats()}")
+        assert m.cache_hits > m0.cache_hits, \
+            "hot-region reads never hit the decoded-tile cache"
+    finally:
+        store.close()
+        if not args.store_dir:
+            shutil.rmtree(root, ignore_errors=True)
+
+
 def serve_llm(args):
     from repro.models.config import reduced_for_smoke
     from repro.models.inputs import dummy_batch
@@ -241,6 +379,14 @@ def main():
                     help="serve concurrent LOPC compression requests "
                          "through the micro-batching service instead of "
                          "an LLM")
+    ap.add_argument("--store", action="store_true",
+                    help="drive a mixed read/write client pool over a "
+                         "persistent LopcStore through the service "
+                         "(store-backed reads, decoded-tile cache)")
+    ap.add_argument("--store-dir", default=None,
+                    help="store mode: existing directory to hold the "
+                         "store (default: a fresh temp dir, removed "
+                         "after the run)")
     ap.add_argument("--eb", type=float, default=1e-2,
                     help="compression service: NOA error bound")
     ap.add_argument("--tile", default="16,16,64",
@@ -266,11 +412,15 @@ def main():
                          "only; bytes are schedule-independent)")
     args = ap.parse_args()
 
+    if args.store:
+        serve_store(args)
+        return
     if args.compress_service:
         serve_compression(args)
         return
     if not args.arch:
-        raise SystemExit("--arch is required unless --compress-service is set")
+        raise SystemExit("--arch is required unless --compress-service "
+                         "or --store is set")
     serve_llm(args)
 
 

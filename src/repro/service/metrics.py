@@ -43,6 +43,11 @@ class ServiceMetrics:
     max_batch_occupancy: int = 0
     device_groups: int = 0
     mean_device_group_occupancy: float = 0.0
+    store_reads: int = 0                  # store read requests served
+    cache_hits: int = 0                   # decoded-tile cache, store reads
+    cache_misses: int = 0
+    cache_evictions: int = 0
+    decoded_tiles_per_request: float = 0.0
     p50_ms: float = 0.0
     p99_ms: float = 0.0
     mean_ms: float = 0.0
@@ -62,6 +67,10 @@ class ServiceMetrics:
             f"{self.mean_batch_occupancy:.2f} / max {self.max_batch_occupancy}; "
             f"{self.device_groups} device groups, "
             f"{self.mean_device_group_occupancy:.2f} requests each",
+            f"tile cache {self.cache_hits} hits / {self.cache_misses} misses "
+            f"/ {self.cache_evictions} evictions over {self.store_reads} "
+            f"store reads; {self.decoded_tiles_per_request:.2f} decoded "
+            "tiles/request",
             f"throughput {self.mbps:.1f} MB/s busy; per kind {self.per_kind}",
             f"transfers  {self.transfers}",
         ]
@@ -82,6 +91,12 @@ class MetricsRecorder:
         self.occupancy_max = 0
         self.device_groups = 0
         self.device_group_requests = 0
+        self.store_reads = 0
+        self.tiles_requested = 0
+        self.tiles_decoded = 0
+        self.cache_hits = 0
+        self.cache_misses = 0
+        self.cache_evictions = 0
         self.busy_seconds = 0.0
         self.payload_bytes = 0
         self.per_kind = Counter()
@@ -119,6 +134,19 @@ class MetricsRecorder:
             self.device_groups += 1
             self.device_group_requests += int(info["n_requests"])
 
+    def record_store_read(self, info: dict) -> None:
+        """One batched store read (``LopcStore.read_roi_many``'s
+        ``stats_cb`` summary): requests served, tiles requested vs
+        actually decoded, and the decoded-tile cache's hit/miss/eviction
+        deltas — the counters that prove hot reads skip the decode."""
+        with self._lock:
+            self.store_reads += int(info["n_requests"])
+            self.tiles_requested += int(info["tiles_requested"])
+            self.tiles_decoded += int(info["tiles_decoded"])
+            self.cache_hits += int(info["cache_hits"])
+            self.cache_misses += int(info["cache_misses"])
+            self.cache_evictions += int(info["cache_evictions"])
+
     def reset_window(self) -> None:
         """Clear the latency window (load tests call this between load
         points so percentiles describe one point, not the lifetime)."""
@@ -147,6 +175,14 @@ class MetricsRecorder:
                 mean_device_group_occupancy=(
                     self.device_group_requests / self.device_groups
                     if self.device_groups else 0.0
+                ),
+                store_reads=self.store_reads,
+                cache_hits=self.cache_hits,
+                cache_misses=self.cache_misses,
+                cache_evictions=self.cache_evictions,
+                decoded_tiles_per_request=(
+                    self.tiles_decoded / self.store_reads
+                    if self.store_reads else 0.0
                 ),
                 p50_ms=percentile(lat, 50) * 1e3,
                 p99_ms=percentile(lat, 99) * 1e3,

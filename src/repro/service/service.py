@@ -27,10 +27,16 @@ Dataflow (one worker, clients on any thread or event loop):
                     same key into ``temporal.compress_chains`` calls
                     (frames at the same time step of concurrent chains
                     share resident batches), decompress requests into
-                    one ``decompress_many``, ROI and frame reads run per
-                    request; the engine then does its own
-                    (tile_shape, dtype, width) device grouping and
-                    reports it back through the ``group_cb`` hook
+                    one ``decompress_many``, store reads by store into
+                    ``LopcStore.read_roi_many`` calls (cache-miss tiles
+                    of concurrent readers deduplicate and share decode
+                    batches; cache hit/miss/eviction counters feed the
+                    metrics), store writes by (store, mode, order) into
+                    ``write_many`` (one shared compress + one manifest
+                    swap), blob ROI and frame reads run per request;
+                    the engine then does its own (tile_shape, dtype,
+                    width) device grouping and reports it back through
+                    the ``group_cb`` hook
   resolve           each request's Future gets its result; per-request
                     latency (submit -> resolve) feeds the metrics
 
@@ -229,6 +235,39 @@ class CompressionService:
         """Queue a region-of-interest decode -> Future[np.ndarray]."""
         return self._submit(_Pending("roi", (blob, tuple(region)), len(blob)))
 
+    def submit_store_roi(self, store, name: str, region: tuple) -> Future:
+        """Queue a store-backed region read -> Future[np.ndarray].
+
+        Store reads in the same micro-batch share one
+        ``LopcStore.read_roi_many`` call: cache-miss tiles of concurrent
+        readers deduplicate and decode in shared device batches, and the
+        store's decoded-tile cache counters land in the service metrics.
+        The store's plan should match the service's (both default to the
+        same engine program cache either way)."""
+        return self._submit(_Pending(
+            "store_roi", (store, str(name), tuple(region)), 0
+        ))
+
+    def submit_store_frame(self, store, name: str, t: int) -> Future:
+        """Queue a store-backed chain frame read -> Future[np.ndarray]."""
+        return self._submit(_Pending(
+            "store_frame", (store, str(name), int(t)), 0
+        ))
+
+    def submit_store_write(self, store, name: str, x, eb,
+                           mode: str = "noa",
+                           preserve_order: bool = True) -> Future:
+        """Queue a compress-and-persist into a store -> Future[int]
+        (stored byte count).  Writes to the same store with one
+        (mode, order) signature share a single ``write_many`` call —
+        one batched compress, one manifest swap."""
+        x = np.asarray(x)
+        return self._submit(_Pending(
+            "store_write",
+            (store, str(name), x, float(eb), mode, bool(preserve_order)),
+            x.nbytes,
+        ))
+
     # Blocking conveniences -------------------------------------------------
 
     def compress(self, x, eb, mode: str = "noa",
@@ -254,6 +293,17 @@ class CompressionService:
 
     def decompress_roi(self, blob: bytes, region: tuple) -> np.ndarray:
         return self.submit_roi(blob, region).result()
+
+    def store_roi(self, store, name: str, region: tuple) -> np.ndarray:
+        return self.submit_store_roi(store, name, region).result()
+
+    def store_frame(self, store, name: str, t: int) -> np.ndarray:
+        return self.submit_store_frame(store, name, t).result()
+
+    def store_write(self, store, name: str, x, eb, mode: str = "noa",
+                    preserve_order: bool = True) -> int:
+        return self.submit_store_write(store, name, x, eb, mode,
+                                       preserve_order).result()
 
     # Asyncio conveniences --------------------------------------------------
 
@@ -282,6 +332,11 @@ class CompressionService:
 
     async def adecompress_roi(self, blob: bytes, region: tuple) -> np.ndarray:
         return await asyncio.wrap_future(self.submit_roi(blob, region))
+
+    async def astore_roi(self, store, name: str, region: tuple) -> np.ndarray:
+        return await asyncio.wrap_future(
+            self.submit_store_roi(store, name, region)
+        )
 
     # -------------------------------------------------------------- metrics
 
@@ -390,10 +445,14 @@ class CompressionService:
 
         # compress requests sharing (mode, preserve_order) share one
         # compress_many call, chain requests one compress_chains call
-        # (frames of concurrent chains share resident step batches); the
-        # engine sub-groups by device signature
+        # (frames of concurrent chains share resident step batches),
+        # store reads share one read_roi_many per store and store writes
+        # one write_many per (store, mode, order); the engine sub-groups
+        # by device signature
         comp_groups: dict[tuple, list[_Pending]] = {}
         chain_groups: dict[tuple, list[_Pending]] = {}
+        sroi_groups: dict[int, list[_Pending]] = {}    # keyed id(store)
+        swrite_groups: dict[tuple, list[_Pending]] = {}
         dec_items: list[_Pending] = []
         per_item: list[_Pending] = []   # roi / frame / chain decode
         for p in batch:
@@ -401,6 +460,12 @@ class CompressionService:
                 comp_groups.setdefault(p.args[2:], []).append(p)
             elif p.kind == "chain":
                 chain_groups.setdefault(p.args[2:4], []).append(p)
+            elif p.kind == "store_roi":
+                sroi_groups.setdefault(id(p.args[0]), []).append(p)
+            elif p.kind == "store_write":
+                swrite_groups.setdefault(
+                    (id(p.args[0]),) + p.args[4:], []
+                ).append(p)
             elif p.kind == "decompress":
                 dec_items.append(p)
             else:
@@ -433,6 +498,25 @@ class CompressionService:
                     group_cb=cb,
                 ),
             )
+        for members in sroi_groups.values():
+            store = members[0].args[0]
+            self._run_many(
+                members,
+                lambda ms, cb, s=store: s.read_roi_many(
+                    [(p.args[1], p.args[2]) for p in ms], stats_cb=cb,
+                ),
+                record=rec.record_store_read,
+            )
+        for members in swrite_groups.values():
+            store = members[0].args[0]
+            mode, order = members[0].args[4], members[0].args[5]
+            self._run_many(
+                members,
+                lambda ms, cb, s=store, m=mode, o=order: s.write_many(
+                    [p.args[1] for p in ms], [p.args[2] for p in ms],
+                    [p.args[3] for p in ms], m, o, group_cb=cb,
+                ),
+            )
         for p in per_item:
             try:
                 if p.kind == "roi":
@@ -441,6 +525,8 @@ class CompressionService:
                 elif p.kind == "frame":
                     out = temporal.decompress_frame(p.args[0], p.args[1],
                                                     plan=self.config.plan)
+                elif p.kind == "store_frame":
+                    out = p.args[0].read_frame(p.args[1], p.args[2])
                 else:  # chain_decompress
                     out = temporal.decompress_chain(p.args[0],
                                                     plan=self.config.plan)
@@ -456,14 +542,17 @@ class CompressionService:
             {k: tc1[k] - tc0.get(k, 0) for k in tc1 if tc1[k] - tc0.get(k, 0)},
         )
 
-    def _run_many(self, members: list[_Pending], fn) -> None:
+    def _run_many(self, members: list[_Pending], fn, record=None) -> None:
         """Run one engine call (``fn(members, group_cb)``) over
         ``members``; on failure, isolate the poison request by retrying
-        each member alone so one bad field (wrong dtype, corrupt blob)
-        cannot fail its batch neighbors.  Device-group reports buffer
-        locally and only reach the metrics when their call succeeded —
-        an aborted batched attempt must not inflate occupancy."""
+        each member alone so one bad field (wrong dtype, corrupt blob,
+        unknown store name) cannot fail its batch neighbors.  Callback
+        reports buffer locally and only reach the metrics (via
+        ``record``, default the device-group counter) when their call
+        succeeded — an aborted batched attempt must not inflate
+        occupancy or cache counters."""
         rec = self.metrics_recorder
+        record = record or rec.record_device_group
         infos: list[dict] = []
         try:
             results = fn(members, infos.append)
@@ -476,11 +565,11 @@ class CompressionService:
                     self._resolve(p, error=e)
                 else:
                     for info in one:
-                        rec.record_device_group(info)
+                        record(info)
                     self._resolve(p, result=out[0])
         else:
             for info in infos:
-                rec.record_device_group(info)
+                record(info)
             for p, out in zip(members, results):
                 self._resolve(p, result=out)
 

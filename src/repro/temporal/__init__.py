@@ -14,18 +14,22 @@ See docs/temporal.md.
 """
 from .chain import (
     DEFAULT_KEYFRAME_INTERVAL,
+    ChainDecoder,
     ChainStats,
     compress_chain,
     compress_chains,
     decompress_chain,
     decompress_frame,
+    encode_appended_frame,
 )
 
 __all__ = [
     "DEFAULT_KEYFRAME_INTERVAL",
+    "ChainDecoder",
     "ChainStats",
     "compress_chain",
     "compress_chains",
     "decompress_chain",
     "decompress_frame",
+    "encode_appended_frame",
 ]

@@ -399,6 +399,74 @@ def compress_chain(frames, eb, mode="noa", preserve_order=True, solver="auto",
     return out[0]
 
 
+# ------------------------------------------------------- appended frames
+
+class _AppendStep:
+    """Single-frame shim presenting the ``_Chain`` surface that
+    :func:`_compress_chain_step` consumes, so an appended frame runs the
+    exact same resident step as a frame inside ``compress_chains`` — the
+    basis of the store's append-vs-whole-chain byte identity."""
+
+    def __init__(self, filled, eps_eff, layout, prev_bins):
+        self.filled = [filled]
+        self.eps_eff = eps_eff
+        self.layout = layout
+        self.prev_bins = prev_bins
+        self.sections: list = [None]
+        self.sweeps = 0
+
+
+def encode_appended_frame(
+    frame,
+    *,
+    eps_abs: float,
+    kind: int,
+    prev_bins=None,
+    prev_max_bin: float = 0.0,
+    preserve_order: bool = True,
+    solver: str = "auto",
+    plan: CompressionPlan | None = None,
+):
+    """Encode ONE frame as if it were the next step of an existing chain.
+
+    ``eps_abs`` is the chain's pinned bin width, ``kind`` the frame kind
+    (``bitstream.FRAME_KEY``/``FRAME_RESIDUAL``), and — for residual
+    frames — ``prev_bins`` is the previous frame's decoded bin tiles in
+    the engine layout (:meth:`ChainDecoder.resident_bins`) with
+    ``prev_max_bin`` its recorded host-side bin bound (the stored width
+    is picked by the same rule as :meth:`_Chain.bins_store`, so an
+    appended frame's bytes equal the ones a whole-chain compress would
+    emit for the same position — tested).  Returns ``(tile_sections,
+    nonfinite_sidecar | None, max_bin, sweeps)``; the caller persists
+    the sections as one more v3 frame payload and keeps ``max_bin`` for
+    the next append.
+    """
+    if solver not in device.SOLVERS:
+        raise ValueError(f"unknown solver method {solver!r}")
+    if kind == bitstream.FRAME_RESIDUAL and prev_bins is None:
+        raise ValueError("a residual frame needs the previous frame's bins")
+    plan = plan or DEFAULT_PLAN
+    x = np.asarray(frame)
+    _validate(x, 1.0)  # eb sign is the chain's concern; validate shape/dtype
+    nonfinite = None
+    if not np.isfinite(x).all():
+        x, nonfinite = encode_nonfinite(x)
+    _check_eps(x, eps_abs)
+    eps_eff = effective_eps(eps_abs)
+    max_bin = float(np.max(np.abs(x), initial=0.0)) / eps_eff + 4
+    if kind == bitstream.FRAME_KEY:
+        store = _store_bin_dtype(max_bin, np.dtype(x.dtype))
+    else:
+        store = _store_bin_dtype(max_bin + prev_max_bin, np.dtype(x.dtype))
+    layout = plan.layout_for(x.shape)
+    step = _AppendStep(x, eps_eff, layout, prev_bins)
+    _compress_chain_step(
+        [step], 0, kind, store, np.dtype(x.dtype),
+        preserve_order, solver, plan, lambda a: jnp.asarray(a),
+    )
+    return step.sections[0], nonfinite, max_bin, step.sweeps
+
+
 # ------------------------------------------------------------ decompress
 
 def _section_word(section: bytes) -> int:
@@ -410,13 +478,22 @@ def _section_word(section: bytes) -> int:
     return int(w)
 
 
-class _ChainDecoder:
+class ChainDecoder:
     """Sequential bins accumulator over a chain's frame run.
 
     ``step(t)`` decodes frame ``t``'s bins stream and folds it into the
     resident bin state (cheap: no subbin decode, no dequantize);
     ``values(t)`` additionally decodes frame ``t``'s subbins and
     reconstructs the frame's values on the host.
+
+    ``c`` is anything exposing the :class:`~repro.core.bitstream.
+    ContainerV3` reading surface (header, tile_shape/grid, entries,
+    frame_tiles) — a parsed v3 blob, or the store layer's manifest-built
+    view whose frame payloads are pread from a payload file, which is
+    how ``LopcStore.read_frame`` replays only the needed frame bytes
+    from disk.  ``resident_bins`` exposes the accumulated predictor
+    state in the engine's ``(n_tiles, *tile)`` layout — the store's
+    ``append_frame`` reads it to seed :func:`encode_appended_frame`.
     """
 
     def __init__(self, c: bitstream.ContainerV3, plan: CompressionPlan):
@@ -431,6 +508,12 @@ class _ChainDecoder:
         )
         self.bins = None     # device (capacity, tile_elems) bin ints
         self.pos = -1        # index of the frame self.bins describes
+
+    def resident_bins(self):
+        """Device ``(n_tiles, *tile)`` bins of the frame ``pos`` points
+        at — the predictor state :func:`encode_appended_frame` takes."""
+        n = self.layout.n_tiles
+        return self.bins[:n].reshape((n,) + self.layout.tile)
 
     def _upload_sections(self, sections, word):
         """Fixed-shape (bitmap, packed) batch of one frame's sections."""
@@ -505,7 +588,7 @@ def decompress_chain(blob: bytes,
     """Reconstruct every frame of a v3 chain -> (n_frames, *shape)."""
     plan = plan or DEFAULT_PLAN
     c = bitstream.read_container_v3(blob)
-    dec = _ChainDecoder(c, plan)
+    dec = ChainDecoder(c, plan)
     return np.stack([dec.values(t) for t in range(c.n_frames)])
 
 
@@ -520,7 +603,7 @@ def decompress_frame(blob: bytes, t: int,
     """
     plan = plan or DEFAULT_PLAN
     c = bitstream.read_container_v3(blob)
-    dec = _ChainDecoder(c, plan)
+    dec = ChainDecoder(c, plan)
     for k in range(c.keyframe_before(t), t):
         dec.step(k)
     return dec.values(t)

@@ -12,12 +12,14 @@ break, not noise.
 """
 from __future__ import annotations
 
+import shutil
 from pathlib import Path
 
 import numpy as np
 
 from repro import engine, temporal
 from repro.data.fields import make_field_sequence, make_scientific_field
+from repro.store import LopcStore
 
 HERE = Path(__file__).resolve().parent
 EB = 1e-2
@@ -48,14 +50,36 @@ def main() -> None:
     v3 = temporal.compress_chain(frames, EB, keyframe_interval=2)
     (HERE / "fixture_v3.lopc").write_bytes(v3)
 
+    # store fixture: a tiny LopcStore directory (manifest + payloads)
+    # pinning docs/store.md the way the .lopc fixtures pin docs/format.md
+    # — one multi-tile snapshot and one chain with both frame kinds,
+    # grown by append_frame so the committed bytes also pin the
+    # append-equals-whole-chain contract
+    store_dir = HERE / "store"
+    shutil.rmtree(store_dir, ignore_errors=True)
+    plan = engine.CompressionPlan(tile_shape=(8, 8, 8))
+    store = LopcStore.create(store_dir, plan=plan)
+    s = make_scientific_field("front", (12, 11, 10), np.float32, seed=24)
+    store.write("snap", s, EB)
+    sframes = make_field_sequence("diffuse", "waves", (10, 9, 8), 3,
+                                  np.float32, seed=25)
+    store.write_chain("evolution", sframes[:2], 1e-1, mode="abs",
+                      keyframe_interval=2)
+    store.append_frame("evolution", sframes[2])
+    store_snap = store.read("snap")
+    store_chain = store.read("evolution")
+    store.close()
+
     np.savez(
         HERE / "expected.npz",
         v2=engine.decompress(v2),
         v2_wide=engine.decompress(v2_wide),
         v3=temporal.decompress_chain(v3),
+        store_snap=store_snap,
+        store_chain=store_chain,
     )
     for p in ("fixture_v2.lopc", "fixture_v2_wide.lopc", "fixture_v3.lopc",
-              "expected.npz"):
+              "expected.npz", "store/manifest.json"):
         print(f"{p}: {(HERE / p).stat().st_size} bytes")
 
 

@@ -34,12 +34,12 @@ def extract_blocks(path: Path) -> list[str]:
 def test_docs_exist_and_have_snippets():
     assert (REPO / "README.md").exists()
     for name in ("engine.md", "service.md", "format.md", "architecture.md",
-                 "temporal.md"):
+                 "temporal.md", "store.md"):
         assert (REPO / "docs" / name).exists(), f"docs/{name} missing"
     # the docs index must link every doc page
     readme = (REPO / "README.md").read_text()
     for name in ("engine.md", "service.md", "format.md", "architecture.md",
-                 "temporal.md"):
+                 "temporal.md", "store.md"):
         assert f"docs/{name}" in readme, f"README does not link docs/{name}"
 
 
@@ -59,5 +59,6 @@ def test_doc_snippets_execute(doc):
                 f"{type(e).__name__}: {e}\n--- snippet ---\n{code}"
             )
         ran += 1
-    if doc.name in ("README.md", "engine.md", "service.md", "temporal.md"):
+    if doc.name in ("README.md", "engine.md", "service.md", "temporal.md",
+                    "store.md"):
         assert ran > 0, f"{doc.name} lost its executable snippets"

@@ -199,6 +199,30 @@ def test_roi_edge_semantics(rng):
         engine.decompress_roi(blob, (slice(0, 5), slice(0, 5)))
 
 
+def test_roi_on_chain_blob_routes_or_raises_by_version(rng):
+    """A v3 chain handed to ``decompress_roi`` is detected by version:
+    a single-frame chain decodes through frame 0 (it is a snapshot in
+    all but framing), a multi-frame chain raises a typed ValueError
+    naming the container version instead of a confusing v2 parse
+    error."""
+    from repro import temporal
+
+    frames = [rng.standard_normal((12, 10, 8)) for _ in range(3)]
+    region = (slice(2, 9), slice(0, 6), slice(3, 8))
+    single = temporal.compress_chain(frames[:1], 1e-2)
+    assert np.array_equal(
+        engine.decompress_roi(single, region),
+        temporal.decompress_frame(single, 0)[region],
+    )
+    multi = temporal.compress_chain(frames, 1e-2)
+    with pytest.raises(ValueError, match="version 3 chain with 3 frames"):
+        engine.decompress_roi(multi, region)
+    # bad slices on a single-frame chain are still validated up front
+    with pytest.raises(ValueError, match="step 1"):
+        engine.decompress_roi(single, (slice(0, 8, 2), slice(0, 5),
+                                       slice(0, 5)))
+
+
 def test_roi_step_validated_even_on_empty_regions(rng):
     """Step validation is uniform: a zero-volume axis must not bypass
     the step-1 requirement of another axis (was inconsistent before the

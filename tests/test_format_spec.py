@@ -331,6 +331,204 @@ def test_spec_decode_matches_library_v3():
                           temporal.decompress_chain(blob), equal_nan=True)
 
 
+# ----------------------------------------------- truncation fuzz (byte
+# boundaries of the committed fixtures: every prefix cut at a structural
+# boundary must raise a strict ValueError — never crash, never decode a
+# silent partial result)
+
+def _v2_cut_points(blob: bytes) -> list[int]:
+    """Structural byte boundaries of a v2 container: every header field
+    edge, every extras-dir and tile-index entry edge, the head crc, and
+    every tile/extra payload edge in the data area."""
+    r = R(blob)
+    cuts = [0, 4]
+    r.raw(4)
+    r.take("BBBB"); cuts.append(r.off)
+    ndim = blob[7]
+    r.take("Q" * ndim); cuts.append(r.off)
+    r.take("B"); r.take("dd"); cuts.append(r.off)
+    r.take("QQQ"); r.take("QQQ"); cuts.append(r.off)
+    n_tiles, n_extra = r.take("IB"); cuts.append(r.off)
+    extras = []
+    for _ in range(n_extra):
+        extras.append(r.take("BQQ"))
+        cuts.append(r.off)
+    entries = []
+    for _ in range(n_tiles):
+        entries.append(r.take(TILE_ENTRY.lstrip("<")))
+        cuts.append(r.off)
+    r.take("I")
+    cuts.append(r.off)            # data_off: index complete, no payload
+    data_off = r.off
+    for boff, blen, soff, slen, _crc in entries:
+        cuts += [data_off + boff, data_off + boff + blen,
+                 data_off + soff + slen]
+    for _tag, off, n in extras:
+        cuts += [data_off + off, data_off + off + n]
+    cuts.append(len(blob) - 1)
+    return sorted({c for c in cuts if 0 <= c < len(blob)})
+
+
+def _v3_cut_points(blob: bytes) -> list[int]:
+    """Structural byte boundaries of a v3 chain: header field edges,
+    every frame-index entry edge, the head crc, and every frame payload
+    edge in the data area."""
+    r = R(blob)
+    cuts = [0, 4]
+    r.raw(4)
+    r.take("BBBB"); cuts.append(r.off)
+    ndim = blob[7]
+    r.take("Q" * ndim); cuts.append(r.off)
+    r.take("B"); r.take("dd"); cuts.append(r.off)
+    r.take("QQQ"); r.take("QQQ"); cuts.append(r.off)
+    n_frames, _interval, _n_tiles, n_extra = r.take("IIIB"); cuts.append(r.off)
+    assert n_extra == 0
+    entries = []
+    for _ in range(n_frames):
+        entries.append(r.take(FRAME_ENTRY.lstrip("<")))
+        cuts.append(r.off)
+    r.take("I")
+    cuts.append(r.off)
+    data_off = r.off
+    for _kind, _fflags, off, length, _crc in entries:
+        cuts += [data_off + off, data_off + off + length]
+    cuts.append(len(blob) - 1)
+    return sorted({c for c in cuts if 0 <= c < len(blob)})
+
+
+@pytest.mark.parametrize("fname", ["fixture_v2.lopc", "fixture_v2_wide.lopc"])
+def test_truncation_at_every_v2_boundary_raises(fname):
+    from repro import engine
+
+    blob = (DATA / fname).read_bytes()
+    cuts = _v2_cut_points(blob)
+    assert len(cuts) > 10  # the fuzz actually covers the structure
+    for cut in cuts:
+        with pytest.raises(ValueError):
+            engine.decompress(blob[:cut])
+
+
+def test_truncation_at_every_v3_boundary_raises():
+    from repro import temporal
+
+    blob = (DATA / "fixture_v3.lopc").read_bytes()
+    cuts = _v3_cut_points(blob)
+    assert len(cuts) > 10
+    for cut in cuts:
+        with pytest.raises(ValueError):
+            temporal.decompress_chain(blob[:cut])
+        with pytest.raises(ValueError):
+            temporal.decompress_frame(blob[:cut], 0)
+
+
+# ------------------------------------------------- store fixture (spec)
+#
+# docs/store.md is normative like docs/format.md: the committed store
+# fixture (tests/data/store/: manifest.json + payload files) decodes
+# with ONLY the spec rules — json manifest fields, payload files sliced
+# by manifest offsets, containers decoded by the v2/v3 rules above.
+
+STORE = DATA / "store"
+
+
+def _store_manifest() -> dict:
+    import json
+
+    m = json.loads((STORE / "manifest.json").read_text())
+    assert m["format"] == "lopc-store" and m["version"] == 1
+    return m
+
+
+def test_spec_decodes_committed_store_snapshot():
+    m = _store_manifest()
+    e = m["arrays"]["snap"]
+    assert e["kind"] == "snapshot" and e["container_version"] == 2
+    blob = (STORE / e["payload"]).read_bytes()
+    # manifest-level integrity: whole-payload length and crc
+    assert len(blob) == e["nbytes"]
+    assert zlib.crc32(blob) & 0xFFFFFFFF == e["crc32"]
+    out = spec_decode_v2(blob)
+    want = EXPECTED["store_snap"]
+    assert out.dtype == want.dtype and tuple(e["shape"]) == want.shape
+    assert np.array_equal(out, want, equal_nan=True)
+
+
+def test_spec_store_snapshot_tiles_are_addressable_from_manifest():
+    """A spec-only reader can decode ONE tile touching only its payload
+    byte range: manifest data_off + the v2 index entry."""
+    m = _store_manifest()
+    e = m["arrays"]["snap"]
+    blob = (STORE / e["payload"]).read_bytes()
+    r = R(blob, e["data_off"] - 4 - 36 * e["n_tiles"])
+    entries = [r.take(TILE_ENTRY.lstrip("<")) for _ in range(e["n_tiles"])]
+    data_off = e["data_off"]
+    boff, blen, soff, slen, crc = entries[0]
+    bins_b = blob[data_off + boff : data_off + boff + blen]
+    sub_b = blob[data_off + soff : data_off + soff + slen]
+    assert zlib.crc32(sub_b, zlib.crc32(bins_b)) & 0xFFFFFFFF == crc
+    tile_elems = int(np.prod(e["tile_shape"]))
+    bins = decode_rze_section(bins_b, tile_elems, "delta")
+    subs = decode_rze_section(sub_b, tile_elems, "raw")
+    vals = dequantize(bins, subs, e["eps_abs"], np.dtype(e["dtype"]))
+    want = EXPECTED["store_snap"]
+    t = e["tile_shape"]
+    # tile 0's interior is the leading corner of the field
+    sub = tuple(min(ts, ws) for ts, ws in zip(t, want.shape))
+    assert np.array_equal(vals.reshape(t)[: sub[0], : sub[1], : sub[2]],
+                          want[: sub[0], : sub[1], : sub[2]])
+
+
+def test_spec_decodes_committed_store_chain():
+    m = _store_manifest()
+    e = m["arrays"]["evolution"]
+    assert e["kind"] == "chain" and e["container_version"] == 3
+    payload = (STORE / e["payload"]).read_bytes()
+    order = bool(e["flags"] & FLAG_ORDER_PRESERVING)
+    tile_elems = int(np.prod(e["tile_shape"]))
+    n_tiles = int(np.prod(e["grid"]))
+    assert e["frames"][0]["kind"] == FRAME_KEY
+    frames, bins = [], None
+    for fe in e["frames"]:
+        fp = payload[fe["off"] : fe["off"] + fe["len"]]
+        assert len(fp) == fe["len"]
+        assert zlib.crc32(fp) & 0xFFFFFFFF == fe["crc"]
+        tiles, nonfinite = _parse_frame_payload(fp, n_tiles)
+        if fe["kind"] == FRAME_KEY:
+            bins = [decode_rze_section(b, tile_elems, "delta")
+                    for b, _ in tiles]
+        else:
+            res = [decode_rze_section(b, tile_elems, "zigzag")
+                   for b, _ in tiles]
+            bins = [p.astype(np.int64) + q.astype(np.int64)
+                    for p, q in zip(bins, res)]
+        values = []
+        for i, (_, sub_b) in enumerate(tiles):
+            subs = (decode_rze_section(sub_b, tile_elems, "raw") if order
+                    else np.zeros(tile_elems, np.int64))
+            values.append(dequantize(np.asarray(bins[i]), subs,
+                                     e["eps_abs"], np.dtype(e["dtype"])))
+        out = _assemble(values, e["tile_shape"], e["grid"],
+                        tuple(e["shape"]), np.dtype(e["dtype"]))
+        if fe["flags"] & FLAG_HAS_NONFINITE:
+            out = _apply_nonfinite(nonfinite, out)
+        frames.append(out)
+    want = EXPECTED["store_chain"]
+    assert np.array_equal(np.stack(frames), want, equal_nan=True)
+
+
+def test_spec_store_matches_library():
+    from repro.store import LopcStore
+
+    store = LopcStore.open(STORE)
+    try:
+        assert np.array_equal(store.read("snap"), EXPECTED["store_snap"],
+                              equal_nan=True)
+        assert np.array_equal(store.read("evolution"),
+                              EXPECTED["store_chain"], equal_nan=True)
+    finally:
+        store.close()
+
+
 def test_spec_decoder_is_independent_of_fixture_generation(rng):
     """The spec decoder also handles freshly written containers (not
     just the committed bytes): 1/2/3-D, both dtypes, both orders."""

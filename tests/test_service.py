@@ -10,6 +10,10 @@
 4. Steady state never retraces: warm traffic re-runs add zero entries
    to the device trace counter.
 5. Error isolation: a poison request fails its own Future only.
+6. Store-backed reads (PR-5): concurrent readers coalesce into shared
+   ``read_roi_many`` calls whose decoded-tile cache counters (hits,
+   misses, evictions, decoded-tiles-per-request) land in
+   ``ServiceMetrics``, and bytes equal direct store/engine reads.
 
 Tests queue requests against a stopped worker and then start it, so
 batch composition (and therefore occupancy and trace buckets) is
@@ -22,15 +26,16 @@ import asyncio
 import numpy as np
 import pytest
 
-from repro import engine
+from repro import engine, temporal
 from repro.engine import device
-from repro.engine.plan import CompressionPlan
+from repro.engine.plan import CompressionPlan, tiles_for_region
 from repro.service import (
     CompressionService,
     ServiceConfig,
     ServiceOverloaded,
     percentile,
 )
+from repro.store import LopcStore
 
 PLAN = CompressionPlan(tile_shape=(8, 8, 8), batch_tiles=4)
 CFG = ServiceConfig(plan=PLAN, solver="auto", max_delay_ms=25.0,
@@ -221,6 +226,117 @@ def test_asyncio_facade(rng):
     for x, b, y in zip(fields, blobs, outs):
         assert b == engine.compress(x, 1e-2, plan=PLAN)
         assert np.abs(x - y).max() <= 1e-2 * (float(x.max()) - float(x.min()))
+
+
+def test_store_requests_coalesce_and_feed_cache_metrics(rng, tmp_path):
+    """Store writes share one ``write_many``, concurrent readers of one
+    region share one decode, and the decoded-tile cache counters show
+    up in ``ServiceMetrics`` (and its ``lines()`` report, which is what
+    ``serve.py --store`` prints)."""
+    store = LopcStore.create(tmp_path / "store", plan=PLAN)
+    try:
+        fields = {
+            f"a{i}": rng.standard_normal((16, 16, 16)).astype(np.float32)
+            for i in range(2)
+        }
+        roi = (slice(3, 12), slice(0, 8), slice(0, 8))
+        per_roi = len(tiles_for_region(PLAN.layout_for((16, 16, 16)), roi))
+        wsvc = CompressionService(CFG, autostart=False)
+        try:
+            # writes queued against a stopped worker -> one micro-batch,
+            # one write_many, one manifest swap
+            _queue_then_start(
+                wsvc,
+                [(wsvc.submit_store_write, store, n, x, 1e-2)
+                 for n, x in fields.items()],
+            )
+            wm = wsvc.metrics()
+            assert wm.max_batch_occupancy == len(fields)
+            assert wm.per_kind["store_write"] == len(fields)
+            # byte contract survives persistence: payload file == direct
+            # engine compress under the same plan
+            for n, x in fields.items():
+                blob = (store.root / store.info(n)["payload"]).read_bytes()
+                assert blob == engine.compress(x, 1e-2, plan=PLAN)
+        finally:
+            wsvc.stop()
+
+        # two concurrent readers per array, same region: the second
+        # reader's tiles deduplicate against the first's in-batch
+        svc = CompressionService(CFG, autostart=False)
+        try:
+            outs = _queue_then_start(
+                svc,
+                [(svc.submit_store_roi, store, n, roi)
+                 for n in fields for _ in range(2)],
+            )
+            m = svc.metrics()
+            for (n, _x), first, second in zip(
+                fields.items(), outs[::2], outs[1::2]
+            ):
+                blob = (store.root / store.info(n)["payload"]).read_bytes()
+                want = engine.decompress(blob, plan=PLAN)[roi]
+                assert first.tobytes() == second.tobytes() == want.tobytes()
+            assert m.store_reads == 4
+            assert m.cache_hits == 0
+            assert m.cache_misses == 2 * per_roi  # once per array, not 2x
+            assert m.decoded_tiles_per_request == pytest.approx(per_roi / 2)
+
+            # hot re-read: every tile hits the cache, zero new decodes
+            hot = svc.store_roi(store, "a0", roi)
+            m2 = svc.metrics()
+            assert hot.tobytes() == outs[0].tobytes()
+            assert m2.cache_hits == per_roi
+            assert m2.cache_misses == m.cache_misses
+            assert m2.decoded_tiles_per_request < m.decoded_tiles_per_request
+            assert m2.per_kind["store_roi"] == 5
+            report = "\n".join(m2.lines())
+            assert "tile cache" in report and "tiles/request" in report
+        finally:
+            svc.stop()
+    finally:
+        store.close()
+
+
+def test_store_frame_eviction_counter_and_poison_isolation(rng, tmp_path):
+    """Chain frame reads work through the service; a tiny cache budget
+    surfaces evictions in the metrics; an unknown array name fails its
+    own Future without harming batch-mates."""
+    # cache budget of exactly one 8x8x8 float32 tile -> reads evict
+    store = LopcStore.create(tmp_path / "store", plan=PLAN, cache_bytes=2048)
+    try:
+        frames = [rng.standard_normal((8, 8, 8)).astype(np.float32)
+                  for _ in range(3)]
+        store.write_chain("ch", frames, 1e-1, mode="abs",
+                          keyframe_interval=2)
+        x = rng.standard_normal((16, 8, 8)).astype(np.float32)
+        store.write("snap", x, 1e-2)
+        blob = (store.root / store.info("snap")["payload"]).read_bytes()
+        chain_blob = temporal.compress_chain(frames, 1e-1, mode="abs",
+                                             plan=PLAN, keyframe_interval=2)
+        roi = (slice(0, 16), slice(0, 8), slice(0, 8))  # 2 tiles > budget
+        svc = CompressionService(CFG, autostart=False)
+        try:
+            f_frame = svc.submit_store_frame(store, "ch", 2)
+            f_roi = svc.submit_store_roi(store, "snap", roi)
+            f_bad = svc.submit_store_roi(store, "missing", roi)
+            svc.start()
+            want = temporal.decompress_frame(chain_blob, 2, plan=PLAN)
+            assert np.array_equal(f_frame.result(timeout=300), want)
+            assert np.array_equal(
+                f_roi.result(timeout=300),
+                engine.decompress(blob, plan=PLAN)[roi],
+            )
+            with pytest.raises(KeyError, match="missing"):
+                f_bad.result(timeout=300)
+            svc.store_roi(store, "snap", roi)  # re-read: evict + refill
+            m = svc.metrics()
+            assert m.failed == 1 and m.cache_evictions > 0
+            assert m.per_kind["store_frame"] == 1
+        finally:
+            svc.stop()
+    finally:
+        store.close()
 
 
 def test_percentile_nearest_rank():

@@ -1,0 +1,350 @@
+"""Store-layer acceptance (PR-5 contract):
+
+1. Tile-addressable reads: ``read_roi`` decodes ONLY the tiles
+   overlapping the region (``executor.DECODE_COUNTS`` delta) and fetches
+   only their payload byte ranges from disk (``FileSource.bytes_read``).
+2. Byte identity: cold, cached, and service-batched reads of one region
+   are byte-for-byte equal to slicing a full ``decompress`` of the
+   stored container.
+3. Cache semantics: hot re-reads decode zero tiles; eviction under a
+   tiny budget only costs re-decodes, never wrong bytes; overwriting an
+   array can never serve stale cached tiles.
+4. Chains: ``append_frame`` emits the exact bytes a whole-chain
+   compress would have at that position; ``read_frame`` replays only
+   the keyframe-bounded run from disk.
+5. Persistence: a reopened store (fresh process state) serves the same
+   bytes from the manifest alone.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro import engine, temporal
+from repro.core import bitstream
+from repro.engine.executor import DECODE_COUNTS
+from repro.engine.plan import CompressionPlan, tiles_for_region
+from repro.store import LopcStore, TileCache
+
+PLAN = CompressionPlan(tile_shape=(8, 8, 8), batch_tiles=4)
+EB = 1e-2
+ROI = (slice(3, 14), slice(2, 10), slice(5, 13))
+
+
+@pytest.fixture
+def store(tmp_path):
+    s = LopcStore.create(tmp_path / "store", plan=PLAN)
+    yield s
+    s.close()
+
+
+def _field(rng, shape=(24, 20, 16), dtype=np.float32):
+    return rng.standard_normal(shape).astype(dtype)
+
+
+def test_read_roi_decodes_only_overlapping_tiles(store, rng):
+    x = _field(rng)
+    store.write("x", x, EB)
+    blob = (store.root / store.info("x")["payload"]).read_bytes()
+    full = engine.decompress(blob, plan=PLAN)
+    layout = PLAN.layout_for(x.shape)
+    expected_tiles = len(tiles_for_region(layout, ROI))
+    assert 0 < expected_tiles < layout.n_tiles
+
+    d0 = DECODE_COUNTS["tiles"]
+    cold = store.read_roi("x", ROI)
+    assert DECODE_COUNTS["tiles"] - d0 == expected_tiles
+    assert np.array_equal(cold, full[ROI])
+
+    # cached re-read: zero decodes, identical bytes
+    d0 = DECODE_COUNTS["tiles"]
+    cached = store.read_roi("x", ROI)
+    assert DECODE_COUNTS["tiles"] - d0 == 0
+    assert cached.tobytes() == cold.tobytes() == full[ROI].tobytes()
+
+
+def test_read_roi_fetches_partial_bytes_from_disk(store, rng):
+    x = _field(rng, (32, 32, 32))
+    store.write("x", x, EB)
+    nbytes = store.info("x")["nbytes"]
+    small = (slice(0, 8), slice(0, 8), slice(0, 8))  # one tile of 64
+    out = store.read_roi("x", small)
+    source = store._readers["x"][2]
+    assert source.bytes_read < nbytes // 2, \
+        "a one-tile read should not fetch most of the payload file"
+    blob = (store.root / store.info("x")["payload"]).read_bytes()
+    assert np.array_equal(out, engine.decompress(blob, plan=PLAN)[small])
+
+
+def test_read_roi_many_batches_and_dedups(store, rng):
+    """Concurrent readers: misses of one hot tile decode once, and
+    arrays with one device signature share decode groups."""
+    xs = {f"a{i}": _field(rng) for i in range(3)}
+    store.write_many(list(xs), list(xs.values()), EB)
+    items = [(n, ROI) for n in xs] + [(n, ROI) for n in xs]  # every ROI twice
+    infos = []
+    groups = []
+    outs = store.read_roi_many(items, stats_cb=infos.append,
+                               group_cb=groups.append)
+    for (n, _), out in zip(items, outs):
+        blob = (store.root / store.info(n)["payload"]).read_bytes()
+        assert np.array_equal(out, engine.decompress(blob, plan=PLAN)[ROI]), n
+    (info,) = infos
+    layout = PLAN.layout_for((24, 20, 16))
+    per_roi = len(tiles_for_region(layout, ROI))
+    assert info["n_requests"] == 6
+    assert info["tiles_requested"] == 6 * per_roi
+    assert info["tiles_decoded"] == 3 * per_roi  # duplicates deduplicated
+    assert info["cache_misses"] == 3 * per_roi
+    # all three arrays share one (dtype, tile, order, words) decode group
+    assert len(groups) == 1 and groups[0]["n_requests"] == 3
+
+
+def test_cache_eviction_under_tiny_budget_stays_correct(tmp_path, rng):
+    store = LopcStore.create(tmp_path / "s", plan=PLAN, cache_bytes=3000)
+    try:
+        x = _field(rng)
+        store.write("x", x, EB)
+        blob = (store.root / store.info("x")["payload"]).read_bytes()
+        full = engine.decompress(blob, plan=PLAN)
+        for _ in range(3):
+            assert np.array_equal(store.read_roi("x", ROI), full[ROI])
+        stats = store.cache.stats()
+        assert stats["evictions"] > 0
+        assert stats["bytes"] <= 3000
+    finally:
+        store.close()
+
+
+def test_overwrite_invalidates_cached_tiles(store, rng):
+    x1, x2 = _field(rng), _field(rng)
+    store.write("x", x1, EB)
+    store.read_roi("x", ROI)  # populate the cache with x1 tiles
+    store.write("x", x2, EB)
+    blob = (store.root / store.info("x")["payload"]).read_bytes()
+    assert np.array_equal(store.read_roi("x", ROI),
+                          engine.decompress(blob, plan=PLAN)[ROI])
+
+
+def test_overwrite_does_not_close_inflight_reader_source(store, rng):
+    """Invalidation drops the stale reader without closing its fd: a
+    reader that grabbed the parsed container before an overwrite must
+    finish its decode against the old bytes, never hit EBADF."""
+    x1, x2 = _field(rng), _field(rng)
+    store.write("x", x1, EB)
+    c, _layout = store._snapshot_reader("x")  # in-flight reader's view
+    store.write("x", x2, EB)                  # invalidates + swaps payload
+    vals = engine.decode_tiles_for_region(c, [0], PLAN)  # old fd, old inode
+    assert vals.shape[0] == 1
+    blob = (store.root / store.info("x")["payload"]).read_bytes()
+    assert np.array_equal(store.read_roi("x", ROI),
+                          engine.decompress(blob, plan=PLAN)[ROI])
+
+
+def test_full_read_does_not_pollute_the_tile_cache(store, rng):
+    """A full scan must not evict the hot-region working set: read()
+    bypasses cache insertion entirely."""
+    x = _field(rng)
+    store.write("x", x, EB)
+    store.read_roi("x", ROI)  # hot working set
+    before = store.cache.stats()["entries"]
+    store.read("x")
+    assert store.cache.stats()["entries"] == before
+    d0 = DECODE_COUNTS["tiles"]
+    store.read_roi("x", ROI)  # still entirely cached
+    assert DECODE_COUNTS["tiles"] - d0 == 0
+
+
+def test_overwrite_writes_new_generation_and_retires_old(store, rng):
+    """Overwrites commit through the manifest swap: the new payload is
+    a fresh generation-suffixed file, the replaced one is unlinked only
+    after the manifest stops referencing it — a manifest can never
+    describe bytes it does not have."""
+    x1, x2 = _field(rng), _field(rng)
+    store.write("x", x1, EB)
+    p1 = store.info("x")["payload"]
+    store.write("x", x2, EB)
+    p2 = store.info("x")["payload"]
+    assert p1 != p2 and ".g" in p2
+    assert not (store.root / p1).exists()  # retired after the swap
+    blob = (store.root / p2).read_bytes()
+    assert np.array_equal(store.read_roi("x", ROI),
+                          engine.decompress(blob, plan=PLAN)[ROI])
+    frames = [_field(rng, (8, 8, 8)) for _ in range(2)]
+    store.write_chain("c", frames, EB)
+    c1 = store.info("c")["payload"]
+    store.write_chain("c", frames, EB)
+    c2 = store.info("c")["payload"]
+    assert c1 != c2 and not (store.root / c1).exists()
+    assert store.n_frames("c") == 2 and store.read("c").shape[0] == 2
+
+
+def test_roi_semantics_match_engine(store, rng):
+    """Negative/clamped/empty slices behave exactly like decompress_roi
+    (both reduce to numpy slicing of the full decode)."""
+    x = _field(rng, (20, 17))
+    store.write("x", x, EB)
+    blob = (store.root / store.info("x")["payload"]).read_bytes()
+    for region in [(slice(-6, None), slice(0, 400)),
+                   (slice(5, 5), slice(0, 3)),
+                   (slice(0, 20), slice(3, 4))]:
+        want = engine.decompress_roi(blob, region, plan=PLAN)
+        got = store.read_roi("x", region)
+        assert got.shape == want.shape and np.array_equal(got, want), region
+    with pytest.raises(ValueError, match="step"):
+        store.read_roi("x", (slice(0, 10, 2), slice(0, 3)))
+
+
+def test_full_read_and_persistence(store, rng, tmp_path):
+    x = _field(rng, (14, 12, 10), np.float64)
+    x = x.copy()
+    x[3, 4, 5] = np.nan
+    x[0, 0, 0] = np.inf
+    store.write("x", x, EB)
+    blob = (store.root / store.info("x")["payload"]).read_bytes()
+    full = engine.decompress(blob, plan=PLAN)
+    assert np.array_equal(store.read("x"), full, equal_nan=True)
+    store.close()
+    re = LopcStore.open(store.root)
+    try:
+        assert re.names() == ["x"]
+        assert np.array_equal(re.read("x"), full, equal_nan=True)
+        # nonfinite cells inside a region restore bit-exactly
+        got = re.read_roi("x", (slice(2, 6), slice(3, 6), slice(4, 8)))
+        assert got.tobytes() == full[2:6, 3:6, 4:8].tobytes()
+    finally:
+        re.close()
+
+
+def test_append_frame_bytes_match_whole_chain_compress(store, rng):
+    frames = [_field(rng, (12, 10, 8)) for _ in range(5)]
+    whole = temporal.compress_chain(frames, 1e-1, mode="abs", plan=PLAN,
+                                    keyframe_interval=2)
+    c3 = bitstream.read_container_v3(whole)
+    store.write_chain("ch", frames[:1], 1e-1, mode="abs",
+                      keyframe_interval=2)
+    for f in frames[1:]:
+        store.append_frame("ch", f)
+    e = store.info("ch")
+    payload = (store.root / e["payload"]).read_bytes()
+    assert store.n_frames("ch") == 5
+    for t, fe in enumerate(e["frames"]):
+        assert fe["kind"] == c3.entries[t].kind
+        assert payload[fe["off"]:fe["off"] + fe["len"]] == \
+            c3.frame_payload(t), f"frame {t} bytes differ from compress_chain"
+    dec = temporal.decompress_chain(whole, plan=PLAN)
+    for t in range(5):
+        assert np.array_equal(store.read_frame("ch", t), dec[t])
+    assert np.array_equal(store.read("ch"), dec)
+
+
+def test_read_frame_replays_only_the_keyframe_run(store, rng):
+    frames = [_field(rng, (12, 10, 8)) for _ in range(6)]
+    store.write_chain("ch", frames, 1e-1, mode="abs", keyframe_interval=3)
+    store.close()  # force a fresh FileSource with zeroed byte accounting
+    re = LopcStore.open(store.root)
+    try:
+        re.read_frame("ch", 4)  # keyframe 3 + residual 4
+        view = re._readers["ch"][1]
+        need = sum(view.entries[t].length for t in (3, 4))
+        assert view.source.bytes_read == need, \
+            "read_frame fetched bytes outside the keyframe-bounded run"
+    finally:
+        re.close()
+
+
+def test_write_chain_accepts_a_generator(store, rng):
+    frames = [_field(rng, (8, 8, 8)) for _ in range(2)]
+    store.write_chain("g", (f for f in frames), EB)
+    assert store.n_frames("g") == 2
+    assert np.array_equal(
+        store.read("g"),
+        temporal.decompress_chain(
+            temporal.compress_chain(frames, EB, plan=PLAN), plan=PLAN),
+    )
+
+
+def test_append_frame_validates(store, rng):
+    frames = [_field(rng, (10, 8, 8)) for _ in range(2)]
+    store.write_chain("ch", frames, EB)  # noa: eps pinned from these frames
+    with pytest.raises(ValueError, match="appended frame"):
+        store.append_frame("ch", _field(rng, (8, 8, 8)))
+    with pytest.raises(ValueError, match="pinned bin width"):
+        store.append_frame("ch", frames[0] * 1e-3)  # range collapsed: the
+        # frame's own noa budget is tighter than the chain's bin width
+    ok = store.append_frame("ch", frames[0] * 2.0)  # widening is fine
+    assert ok == 2 and store.n_frames("ch") == 3
+
+
+def test_kind_and_name_errors(store, rng):
+    store.write("snap", _field(rng), EB)
+    store.write_chain("ch", [_field(rng, (8, 8, 8))], EB)
+    with pytest.raises(KeyError, match="no array"):
+        store.read_roi("missing", ROI)
+    with pytest.raises(ValueError, match="chain"):
+        store.read_roi("ch", ROI)
+    with pytest.raises(ValueError, match="snapshot"):
+        store.read_frame("snap", 0)
+    with pytest.raises(ValueError, match="bad array name"):
+        store.write("no/slashes", _field(rng), EB)
+    with pytest.raises(ValueError):
+        store.put("junk", b"not a container")
+    store.delete("snap")
+    assert store.names() == ["ch"]
+    with pytest.raises(KeyError):
+        store.read("snap")
+
+
+def test_open_requires_manifest(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        LopcStore.open(tmp_path / "nowhere")
+    with pytest.raises(FileExistsError):
+        s = LopcStore.create(tmp_path / "s")
+        s.close()
+        LopcStore.create(tmp_path / "s")
+
+
+def test_plan_mismatch_refused(tmp_path):
+    s = LopcStore.create(tmp_path / "s", plan=PLAN)
+    s.close()
+    with pytest.raises(ValueError, match="plan"):
+        LopcStore.open(tmp_path / "s", plan=CompressionPlan((4, 4, 4)))
+    s2 = LopcStore.open(tmp_path / "s", plan=PLAN)  # matching plan is fine
+    s2.close()
+
+
+def test_tile_cache_unit():
+    cache = TileCache(max_bytes=100)
+    a = np.arange(10, dtype=np.float64)  # 80 bytes
+    cache.put(("x", 0, 1), a)
+    assert cache.get(("x", 0, 1)) is not None
+    assert cache.get(("x", 1, 1)) is None
+    cache.put(("x", 1, 1), a)  # over budget: evicts the LRU entry
+    assert cache.stats()["evictions"] == 1
+    assert cache.get(("x", 0, 1)) is None
+    cache.invalidate("x")
+    assert cache.stats()["entries"] == 0
+    got = cache.stats()
+    assert got["hits"] == 1 and got["misses"] == 2
+    big = np.zeros(1000)
+    cache.put(("y", 0, 1), big)  # larger than the budget: not cached
+    assert cache.get(("y", 0, 1)) is None
+    with pytest.raises(ValueError):
+        TileCache(max_bytes=-1)
+    # a view is copied on insert, so an entry never pins its base array
+    # (one cached tile must not keep a whole batched decode alive)
+    batch = np.ones((4, 10))
+    roomy = TileCache(max_bytes=1000)
+    roomy.put(("v", 0, 1), batch[0])
+    assert roomy.get(("v", 0, 1)).base is None
+
+
+def test_cached_tiles_are_immutable(store, rng):
+    x = _field(rng)
+    store.write("x", x, EB)
+    out = store.read_roi("x", ROI)
+    out2 = store.read_roi("x", ROI)
+    # outputs are fresh arrays; mutating one cannot poison the cache
+    out[...] = 0
+    assert not np.array_equal(out, out2)
+    assert np.array_equal(store.read_roi("x", ROI), out2)
