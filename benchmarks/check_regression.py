@@ -30,13 +30,27 @@ deduplicating concurrent readers' misses), and the fresh run's cached
 read must beat its own cold read outright — a cache that decodes
 nothing yet loses on latency is broken caching on any machine.
 
-Throughput numbers are deliberately NOT gated: CI machines are shared
-and MB/s is noise there; the bench still records it for trajectory.
+``--service`` gates a fresh ``BENCH_service.json`` against
+``benchmarks/baselines/service_baseline.json``: every load point the
+baseline records as steady-state (``traces_added == 0``) must stay at
+zero — the shape-bucketed admission's closed capacity classes make a
+prewarmed server retrace-free under ANY load mix, so a single new trace
+under load is the p99-collapse bug coming back, not noise; each point's
+p99/p50 spread must stay within a generous headroom of its committed
+value; the top-load p99 must stay within the committed multiple of the
+reference (second-highest) pool's p99; and scaling up clients must not
+lose more than half the single-client throughput measured in the SAME
+run (a same-run ratio, so shared-runner speed cancels out).
+
+Throughput numbers are deliberately NOT gated in absolute terms: CI
+machines are shared and MB/s is noise there; the bench still records it
+for trajectory.
 
   PYTHONPATH=src python -m benchmarks.check_regression
   PYTHONPATH=src python -m benchmarks.check_regression --update-baseline
   PYTHONPATH=src python -m benchmarks.check_regression --temporal
   PYTHONPATH=src python -m benchmarks.check_regression --store
+  PYTHONPATH=src python -m benchmarks.check_regression --service
 
 ``--update-baseline`` rewrites the baseline from the current bench
 output (run after an intentional ratio/transfer change, commit the
@@ -65,8 +79,23 @@ STORE_BENCH_PATH = (
 STORE_BASELINE_PATH = (
     Path(__file__).resolve().parent / "baselines" / "store_baseline.json"
 )
+SERVICE_BENCH_PATH = (
+    Path(__file__).resolve().parent / "results" / "BENCH_service.json"
+)
+SERVICE_BASELINE_PATH = (
+    Path(__file__).resolve().parent / "baselines" / "service_baseline.json"
+)
 
 RATIO_TOL = 0.01
+
+# Service gate knobs.  Latency spreads are same-run ratios (p99/p50,
+# top-load p99 / reference p99) so runner speed cancels, but scheduling
+# jitter doesn't — hence generous multiplicative headroom on committed
+# values.  Trace counts are deterministic and get zero headroom.
+SERVICE_LAT_HEADROOM = 3.0     # fresh p99/p50 may reach committed x this
+SERVICE_P99_LOAD_CEILING = 2.0  # top-load p99 vs reference pool's p99
+SERVICE_LOAD_TOL = 0.25         # headroom on the load ceiling
+SERVICE_TPUT_FRACTION = 0.5     # top-load MB/s vs same-run single client
 
 # The committed margin time-correlated sequences must beat snapshots by
 # (the tentpole claim of the temporal subsystem).  Noise-dominated hard
@@ -254,6 +283,84 @@ def check_store(baseline: dict, bench: dict,
     return problems
 
 
+def extract_service_baseline(bench: dict) -> dict:
+    """The gated slice of a BENCH_service.json load sweep."""
+    return {
+        "eb": bench["eb"],
+        "plan": bench["plan"],
+        "max_delay_ms": bench["max_delay_ms"],
+        "requests_per_client": bench["requests_per_client"],
+        "p99_load_ceiling": SERVICE_P99_LOAD_CEILING,
+        "throughput_fraction": SERVICE_TPUT_FRACTION,
+        "load_points": {
+            str(p["clients"]): {
+                "traces_added": p["traces_added"],
+                "p99_over_p50": (p["p99_ms"] / p["p50_ms"]
+                                 if p["p50_ms"] else 0.0),
+            }
+            for p in bench["load_points"]
+        },
+    }
+
+
+def check_service(baseline: dict, bench: dict,
+                  ratio_tol: float = RATIO_TOL) -> list[str]:
+    """-> list of violations (empty means the service gate passes)."""
+    del ratio_tol  # latency gates use their own headroom constants
+    problems = []
+    for key in ("eb", "plan", "max_delay_ms", "requests_per_client"):
+        if bench.get(key) != baseline.get(key):
+            problems.append(
+                f"bench config drifted: {key}={bench.get(key)!r} vs "
+                f"baseline {baseline.get(key)!r}"
+            )
+    points = {str(p["clients"]): p for p in bench["load_points"]}
+    for clients, base in baseline["load_points"].items():
+        p = points.get(clients)
+        if p is None:
+            problems.append(f"{clients} clients: load point missing "
+                            "from bench output")
+            continue
+        if base["traces_added"] == 0 and p["traces_added"] > 0:
+            problems.append(
+                f"{clients} clients: {p['traces_added']} jit trace(s) "
+                "added in steady state — the closed capacity-class set "
+                "no longer covers this load mix (retrace storm risk)"
+            )
+        spread = p["p99_ms"] / p["p50_ms"] if p["p50_ms"] else 0.0
+        limit = max(base["p99_over_p50"], 1.0) * SERVICE_LAT_HEADROOM
+        if spread > limit:
+            problems.append(
+                f"{clients} clients: p99/p50 spread {spread:.2f} exceeds "
+                f"{SERVICE_LAT_HEADROOM:g}x the committed "
+                f"{base['p99_over_p50']:.2f} — tail latency is collapsing "
+                "under load again"
+            )
+    swept = sorted(bench["load_points"], key=lambda p: p["clients"])
+    if len(swept) >= 2:
+        top, ref = swept[-1], swept[-2]
+        ceiling = (baseline.get("p99_load_ceiling", SERVICE_P99_LOAD_CEILING)
+                   * (1.0 + SERVICE_LOAD_TOL))
+        if ref["p99_ms"] and top["p99_ms"] / ref["p99_ms"] > ceiling:
+            problems.append(
+                f"p99 at {top['clients']} clients ({top['p99_ms']:.0f} ms) "
+                f"is {top['p99_ms'] / ref['p99_ms']:.2f}x the "
+                f"{ref['clients']}-client p99 ({ref['p99_ms']:.0f} ms), "
+                f"above the {ceiling:.2f}x ceiling"
+            )
+        single = swept[0]
+        frac = baseline.get("throughput_fraction", SERVICE_TPUT_FRACTION)
+        if (single["clients"] == 1
+                and top["wall_mbps"] < frac * single["wall_mbps"]):
+            problems.append(
+                f"throughput at {top['clients']} clients "
+                f"({top['wall_mbps']:.1f} MB/s) fell below {frac:g}x the "
+                f"same-run single-client rate ({single['wall_mbps']:.1f} "
+                "MB/s) — batching is losing to queueing"
+            )
+    return problems
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--bench", type=Path, default=None)
@@ -265,25 +372,34 @@ def main(argv=None) -> int:
     ap.add_argument("--store", action="store_true",
                     help="gate BENCH_store.json (tile-addressable reads, "
                          "decoded-tile cache) instead of BENCH_engine.json")
+    ap.add_argument("--service", action="store_true",
+                    help="gate BENCH_service.json (steady-state zero "
+                         "retrace, p99-under-load, same-run throughput) "
+                         "instead of BENCH_engine.json")
     ap.add_argument("--update-baseline", action="store_true",
                     help="rewrite the baseline from the current bench output")
     args = ap.parse_args(argv)
-    if args.temporal and args.store:
-        ap.error("--temporal and --store are mutually exclusive")
+    if sum((args.temporal, args.store, args.service)) > 1:
+        ap.error("--temporal, --store and --service are mutually exclusive")
     if args.bench is None:
         args.bench = (TEMPORAL_BENCH_PATH if args.temporal
-                      else STORE_BENCH_PATH if args.store else BENCH_PATH)
+                      else STORE_BENCH_PATH if args.store
+                      else SERVICE_BENCH_PATH if args.service else BENCH_PATH)
     if args.baseline is None:
         args.baseline = (TEMPORAL_BASELINE_PATH if args.temporal
                          else STORE_BASELINE_PATH if args.store
+                         else SERVICE_BASELINE_PATH if args.service
                          else BASELINE_PATH)
     extract = (extract_temporal_baseline if args.temporal
                else extract_store_baseline if args.store
+               else extract_service_baseline if args.service
                else extract_baseline)
     gate = (check_temporal if args.temporal
-            else check_store if args.store else check)
+            else check_store if args.store
+            else check_service if args.service else check)
     label = ("temporal" if args.temporal
-             else "store" if args.store else "bench")
+             else "store" if args.store
+             else "service" if args.service else "bench")
 
     bench = json.loads(args.bench.read_text())
     if args.update_baseline:
@@ -311,6 +427,13 @@ def main(argv=None) -> int:
               f"{len(baseline['workloads'])} workloads tile-addressable, "
               f"cached reads decode nothing and beat cold, batched "
               f"decoded-tiles/request within bounds")
+    elif args.service:
+        n_zero = sum(1 for p in baseline["load_points"].values()
+                     if p["traces_added"] == 0)
+        print(f"service regression gate passed: "
+              f"{len(baseline['load_points'])} load points, {n_zero} "
+              f"steady-state (zero retrace), p99 spread and top-load "
+              f"p99/throughput within bounds")
     else:
         n = len(baseline["fields"])
         print(f"bench regression gate passed: {n} fields within "

@@ -151,6 +151,43 @@ def run(inputs: dict[str, np.ndarray]) -> dict:
                      f"{le['decompress_mbps']:.1f} MB/s "
                      f"({entry['speedup']['decompress']:.2f}x)"))
 
+    # fused Pallas decode vs the staged program chain: warm single-field
+    # decompress per f32 input (the fused kernel covers f32 ordered
+    # decode; f64 falls back to staged), plus one large synthetic f32
+    # field squarely above the auto crossover.  "auto" switches to fused
+    # once the padded batch clears FUSED_AUTO_MIN_ELEMS elements; all
+    # three paths must decode byte-identically.
+    from repro.data.fields import make_scientific_field
+
+    decode_fields = {n: inputs[n] for n in names
+                     if inputs[n].dtype == np.float32}
+    decode_fields["synthetic_f32_96"] = make_scientific_field(
+        "turbulence", (96, 96, 96), np.float32, seed=11)
+    report["decode_paths"] = {
+        "auto_min_elems": engine.executor.FUSED_AUTO_MIN_ELEMS,
+        "fields": {},
+    }
+    for name, x in decode_fields.items():
+        blob = engine.compress(x, EB, plan=PLAN)
+        mb = x.nbytes / 1e6
+        outs, entry = {}, {}
+        for path in ("staged", "fused", "auto"):
+            outs[path], _, warm = _cold_warm(
+                lambda: engine.decompress(blob, plan=PLAN, decode_path=path))
+            entry[path] = {"warm_ms": warm * 1e3, "mbps": mb / warm}
+        for path in ("fused", "auto"):
+            assert np.array_equal(outs[path], outs["staged"],
+                                  equal_nan=True), \
+                f"decode_path={path} diverged from staged on {name}"
+        entry["shape"] = list(x.shape)
+        entry["fused_speedup"] = (entry["staged"]["warm_ms"]
+                                  / entry["fused"]["warm_ms"])
+        report["decode_paths"]["fields"][name] = entry
+        rows.append((f"{name}_decode_fused", entry["fused"]["warm_ms"] / 1e3,
+                     f"fused {entry['fused']['warm_ms']:.1f}ms vs staged "
+                     f"{entry['staged']['warm_ms']:.1f}ms "
+                     f"({entry['fused_speedup']:.2f}x)"))
+
     # batched serving shape: all fields as ONE compress_many call — the
     # regime the resident executor exists for (shared buckets, one
     # upload/download per group, constant traces under a mixed stream)

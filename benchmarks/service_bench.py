@@ -8,14 +8,15 @@ executor's transfer counters — the serving-side companion of
 ``engine_bench.py``, written to ``BENCH_service.json``.
 
 The workload is a fixed mixed-shape/dtype request set against one
-production plan, warmed with a full pass at the highest load before the
-sweep, so load points measure steady-state scheduling, not compile
-time; the per-point trace delta is recorded so any residual compile
-cost is visible rather than silently folded into latency (resident
-capacity buckets are composition-dependent, so a rare new bucket can
-still appear — the *controlled* zero-retrace guarantee is asserted in
-tests/test_service.py where traffic is deterministic).  Before the
-sweep every warmup container is compared byte-for-byte against a direct
+production plan.  Admission is shape-bucketed (``repro.engine.buckets``)
+so the capacity classes any load mix can land in are a closed,
+enumerable set: the prewarm pass walks every (field signature, capacity
+class) combination once off the clock, and every measured load point
+then reports ``traces_added == 0`` — the sweep measures steady-state
+scheduling, never compile time.  Each point also records the bucket pad
+waste (dead padding tiles per real tile) so the cost of the closed
+class set is visible next to the latency it buys.  Before the sweep
+every warmup container is compared byte-for-byte against a direct
 ``engine.compress`` call — the service must be pure scheduling, never a
 different compressor.
 
@@ -52,6 +53,37 @@ MAX_DELAY_MS = 5.0
 SHAPES = [(32, 32, 32), (24, 40, 16), (48, 33), (4000,)]
 DTYPES = (np.float32, np.float64)
 GENS = ("gaussians", "turbulence", "waves", "front")
+
+
+def _prewarm():
+    """Warm every (field signature, capacity class) trace bucket.
+
+    The class set is closed (``buckets.capacity_classes``), so it can be
+    enumerated up front: for each shape/dtype signature, compress and
+    decompress enough copies in one group to land each reachable class
+    exactly once.  Direct engine calls keep the grouping deterministic
+    (the device program cache is global, so this warms the service too).
+    Returns the per-signature warm containers for the byte-contract
+    check."""
+    from repro.core import bitstream
+    from repro.engine import buckets
+
+    floor = max(buckets.CAPACITY_FLOOR, PLAN.batch_tiles)
+    warm = []
+    for shape in SHAPES:
+        for dt in DTYPES:
+            x = make_scientific_field(GENS[0], shape, dt, seed=7)
+            blob = engine.compress(x, EB, plan=PLAN)
+            engine.decompress(blob, plan=PLAN)
+            warm.append((x, blob))
+            n_tiles = bitstream.read_container_v2(blob).n_tiles
+            for cap in buckets.capacity_classes(floor):
+                copies = cap // n_tiles
+                if not copies:
+                    continue  # class unreachable for this signature
+                blobs = engine.compress_many([x] * copies, EB, plan=PLAN)
+                engine.decompress_many(blobs, plan=PLAN)
+    return warm
 
 
 def _workload(seed: int, n: int) -> list[np.ndarray]:
@@ -106,17 +138,14 @@ def run(inputs=None) -> dict:
     }
     rows = []
     with CompressionService(cfg) as svc:
-        # warm every per-shape program bucket off the clock
-        warm = [make_scientific_field(g, s, d, seed=7)
-                for s in SHAPES for d in DTYPES for g in GENS[:1]]
-        wblobs = [f.result()
-                  for f in [svc.submit_compress(x, EB) for x in warm]]
-        for f in [svc.submit_decompress(b) for b in wblobs]:
-            f.result()
+        # warm every (signature, capacity class) program bucket off the
+        # clock — the closed class set makes this enumerable
+        warm = _prewarm()
         # byte contract: service == direct engine call, bit for bit
-        for x, b in zip(warm, wblobs):
-            assert b == engine.compress(x, EB, plan=PLAN), \
+        for x, b in warm:
+            assert svc.submit_compress(x, EB).result() == b, \
                 "service bytes diverged from direct engine compress"
+
         def load_pass(n_clients: int):
             t0 = time.perf_counter()
             with ThreadPoolExecutor(n_clients) as pool:
@@ -127,9 +156,9 @@ def run(inputs=None) -> dict:
             return mbs, time.perf_counter() - t0
 
         for n_clients in CLIENT_POOLS:
-            # unmeasured pass first: group sizes (and hence resident
-            # capacity buckets) scale with load, so each point warms the
-            # buckets its own batches land in before the clock starts
+            # unmeasured pass first: thread-pool spin-up and allocator
+            # steady state, not trace warming — the prewarm already
+            # covered every capacity class any load mix can land in
             load_pass(n_clients)
             svc.metrics_recorder.reset_window()
             m0 = svc.metrics()
@@ -142,6 +171,8 @@ def run(inputs=None) -> dict:
                  - m0.mean_batch_occupancy * m0.batches) / batches
                 if batches else 0.0
             )
+            real = m.bucket_real_tiles - m0.bucket_real_tiles
+            padded = m.bucket_padded_tiles - m0.bucket_padded_tiles
             point = {
                 "clients": n_clients,
                 "requests": m.completed - m0.completed,
@@ -154,7 +185,20 @@ def run(inputs=None) -> dict:
                 "mean_batch_occupancy": occupancy,
                 "max_batch_occupancy": m.max_batch_occupancy,
                 "mean_device_group_occupancy": m.mean_device_group_occupancy,
-                "traces_added": engine.device.trace_count() - trace0,
+                # per-point, from the service metrics: jit traces the
+                # measured pass added (steady state == 0 by the closed
+                # class set) and the padding the classes cost
+                "traces_added": m.traces_added - m0.traces_added,
+                "engine_traces_added": engine.device.trace_count() - trace0,
+                "bucket_real_tiles": real,
+                "bucket_padded_tiles": padded,
+                "bucket_pad_waste": padded / real if real else 0.0,
+                "bucket_batches": {
+                    str(c): m.bucket_batches.get(c, 0)
+                    - m0.bucket_batches.get(c, 0)
+                    for c in sorted(m.bucket_batches)
+                    if m.bucket_batches.get(c, 0) > m0.bucket_batches.get(c, 0)
+                },
                 "rejected_so_far": m.rejected,
             }
             report["load_points"].append(point)
@@ -162,7 +206,8 @@ def run(inputs=None) -> dict:
                 f"service_{n_clients}_clients", wall,
                 f"{point['wall_mbps']:.1f}MB/s p50={point['p50_ms']:.0f}ms "
                 f"p99={point['p99_ms']:.0f}ms occ={occupancy:.2f} "
-                f"traces+{point['traces_added']}",
+                f"traces+{point['traces_added']} "
+                f"pad={point['bucket_pad_waste']:.2f}",
             ))
         report["final_metrics"] = {
             k: v for k, v in vars(svc.metrics()).items()

@@ -50,7 +50,9 @@ def bitunshuffle(shuffled: jnp.ndarray) -> jnp.ndarray:
     n_chunks, length = shuffled.shape
     assert length % w == 0
     shuffled = jax.lax.optimization_barrier(shuffled)  # see bitshuffle
-    shifts = jnp.arange(w - 1, -1, -1, dtype=dt)
+    # staged iota, not jnp.arange: also runs inside the fused Pallas
+    # decode kernel, which cannot capture array constants
+    shifts = jnp.array(w - 1, dt) - jax.lax.iota(dt, w)
     one = jnp.array(1, dt)
     words = jnp.zeros((n_chunks, length), dt)
     per = length // w

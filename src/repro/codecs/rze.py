@@ -11,6 +11,7 @@ host serializer slices by count.
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -72,7 +73,9 @@ def rze_decode(bitmap: jnp.ndarray, packed: jnp.ndarray):
     dt = packed.dtype
     w = dt.itemsize * 8
     n_chunks, length = packed.shape
-    shifts = jnp.arange(w - 1, -1, -1, dtype=dt)
+    # staged iota, not jnp.arange: this function also runs inside the
+    # fused Pallas decode kernel, which cannot capture array constants
+    shifts = jnp.array(w - 1, dt) - jax.lax.iota(dt, w)
     one = jnp.array(1, dt)
     bits = (bitmap[:, :, None] >> shifts[None, None, :]) & one
     nz = bits.reshape(n_chunks, length) != 0

@@ -484,3 +484,27 @@ def resident_decode_plain(bitmap, packed, eps, tile_elems: int, dtype):
     bins = decode_tiles(bitmap, packed, tile_elems, "delta",
                         _signed_twin(packed))
     return dequantize_tiles(bins, jnp.zeros_like(bins), eps, jnp.dtype(dtype))
+
+
+@partial(jax.jit, static_argnames=("tile_elems", "dtype", "interpret"))
+def _fused_decode_program(bitmap, packed, sub_bitmap, sub_packed, eps,
+                          tile_elems: int, dtype, interpret: bool):
+    TRACE_COUNTS["fused_decode"] += 1
+    from ..kernels.fused_decode import decode_tiles_fused
+
+    return decode_tiles_fused(bitmap, packed, sub_bitmap, sub_packed, eps,
+                              tile_elems=tile_elems, dtype=dtype,
+                              interpret=interpret)
+
+
+def resident_decode_fused(bitmap, packed, sub_bitmap, sub_packed, eps,
+                          tile_elems: int, dtype):
+    """Single-dispatch alternative to ``resident_decode_order``: the
+    whole RZE -> BIT -> transform -> dequantize chain as one Pallas
+    kernel gridded over tiles (``kernels.fused_decode``).  Bit-identical
+    to the staged chain; interpret mode off-TPU like every kernel."""
+    _, interpret = resolve_solver("auto")
+    return _fused_decode_program(bitmap, packed, sub_bitmap, sub_packed,
+                                 eps, tile_elems=tile_elems,
+                                 dtype=jnp.dtype(dtype),
+                                 interpret=interpret)

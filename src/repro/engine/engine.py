@@ -43,6 +43,7 @@ from ..core.quantize import (
     effective_eps,
 )
 from . import device
+from . import buckets
 from .executor import Executor, default_executor
 from .plan import (
     HALO,
@@ -228,10 +229,12 @@ def compress_many(
     stats: list[CompressStats | None] = [None] * len(reqs)
     for (dtype, tile, _store), members in groups.items():
         if group_cb is not None:
+            sizes = [reqs[i].layout.n_tiles for i in members]
             group_cb({
                 "kind": "compress", "dtype": str(dtype), "tile": tile,
                 "n_requests": len(members),
-                "n_tiles": sum(reqs[i].layout.n_tiles for i in members),
+                "n_tiles": sum(sizes),
+                "tile_batches": _compress_batches(sizes, plan),
             })
         _compress_group(
             [reqs[i] for i in members], dtype, ex, preserve_order,
@@ -347,7 +350,28 @@ def _as_container(reader) -> bitstream.ContainerV2:
     return reader
 
 
-def _decode_runs(runs, plan, group_cb=None):
+def _compress_batches(sizes, plan):
+    """Device batches a compress group will run as -> [(real, capacity)].
+
+    The same ``buckets`` planning the executor uses, so ``group_cb``
+    consumers (the service's pad-waste metrics) see exactly the batches
+    that execute."""
+    floor = max(buckets.CAPACITY_FLOOR, plan.batch_tiles)
+    out = []
+    for lo, hi in buckets.plan_request_chunks(tuple(sizes), floor):
+        n = int(sum(sizes[lo:hi]))
+        out.append((n, buckets.bucket_capacity(n, floor)))
+    return out
+
+
+def _decode_batches(n_tiles, plan):
+    """Decode-side twin of :func:`_compress_batches`."""
+    floor = max(buckets.CAPACITY_FLOOR, plan.batch_tiles)
+    return [(n, buckets.bucket_capacity(n, floor))
+            for n in buckets.plan_tile_chunks(n_tiles, floor)]
+
+
+def _decode_runs(runs, plan, group_cb=None, decode_path: str = "auto"):
     """Decode a list of tile runs sharing device batches across readers.
 
     ``runs`` holds ``(container, layout, tile_ids)`` triples; tiles of
@@ -356,7 +380,8 @@ def _decode_runs(runs, plan, group_cb=None):
     grouping under ``decompress_many``, ``decompress_roi``, and the
     store's batched reads.  Returns one ``(len(tile_ids), *tile)`` value
     array per run.  ``group_cb`` mirrors :func:`compress_many`'s
-    per-device-group reporting hook.
+    per-device-group reporting hook; ``decode_path`` selects the staged
+    or fused decompress backend (see :class:`~.executor.Executor`).
     """
     groups: dict[tuple, list[int]] = {}
     for i, (c, layout, tile_ids) in enumerate(runs):
@@ -369,13 +394,15 @@ def _decode_runs(runs, plan, group_cb=None):
         np.empty((0,) + tuple(layout.tile), np.dtype(c.header.dtype))
         for c, layout, _ in runs
     ]
-    ex = default_executor(plan, "auto")
+    ex = default_executor(plan, "auto", decode_path)
     for (dtype, tile, order, words), members in groups.items():
         if group_cb is not None:
+            n_tiles = sum(len(runs[i][2]) for i in members)
             group_cb({
                 "kind": "decompress", "dtype": str(dtype), "tile": tile,
                 "n_requests": len(members),
-                "n_tiles": sum(len(runs[i][2]) for i in members),
+                "n_tiles": n_tiles,
+                "tile_batches": _decode_batches(n_tiles, plan),
             })
         items, spans = [], []
         for i in members:
@@ -391,7 +418,8 @@ def _decode_runs(runs, plan, group_cb=None):
 
 
 def decode_tiles_for_region(reader, tile_ids,
-                            plan: CompressionPlan | None = None) -> np.ndarray:
+                            plan: CompressionPlan | None = None,
+                            decode_path: str = "auto") -> np.ndarray:
     """Tile-granular decode entry point -> values ``(len(tile_ids), *tile)``.
 
     ``reader`` is a parsed :class:`~repro.core.bitstream.ContainerV2`
@@ -405,11 +433,13 @@ def decode_tiles_for_region(reader, tile_ids,
     plan = plan or DEFAULT_PLAN
     c = _as_container(reader)
     layout = container_layout(c)
-    return _decode_runs([(c, layout, list(tile_ids))], plan)[0]
+    return _decode_runs([(c, layout, list(tile_ids))], plan,
+                        decode_path=decode_path)[0]
 
 
 def decode_tiles_many(runs, plan: CompressionPlan | None = None,
-                      group_cb=None) -> list[np.ndarray]:
+                      group_cb=None, decode_path: str = "auto",
+                      ) -> list[np.ndarray]:
     """Batched form of :func:`decode_tiles_for_region`.
 
     ``runs`` is a list of ``(reader, tile_ids)`` pairs; tiles of all
@@ -423,20 +453,23 @@ def decode_tiles_many(runs, plan: CompressionPlan | None = None,
     for reader, tile_ids in runs:
         c = _as_container(reader)
         parsed.append((c, container_layout(c), list(tile_ids)))
-    return _decode_runs(parsed, plan, group_cb)
+    return _decode_runs(parsed, plan, group_cb, decode_path)
 
 
-def decompress(blob: bytes, plan: CompressionPlan | None = None) -> np.ndarray:
+def decompress(blob: bytes, plan: CompressionPlan | None = None,
+               decode_path: str = "auto") -> np.ndarray:
     """Reconstruct a full field from a v2 container.
 
     Tiles are independent sections (own crc, own RZE streams), so this
     decode is embarrassingly parallel; here they run as fixed-shape
-    fused device batches.
+    fused device batches.  ``decode_path`` selects the staged stage
+    programs or the fused Pallas kernel (bit-identical; speed only).
     """
     plan = plan or DEFAULT_PLAN
     c = bitstream.read_container_v2(blob)
     layout = container_layout(c)
-    values = _decode_runs([(c, layout, list(range(layout.n_tiles)))], plan)[0]
+    values = _decode_runs([(c, layout, list(range(layout.n_tiles)))], plan,
+                          decode_path=decode_path)[0]
     return _assemble_field(values, c, layout)
 
 
@@ -461,7 +494,7 @@ def _assemble_field(values, c: bitstream.ContainerV2, layout: TileLayout):
 
 
 def decompress_many(blobs, plan: CompressionPlan | None = None,
-                    group_cb=None):
+                    group_cb=None, decode_path: str = "auto"):
     """Batched decode: tiles of all containers with one (tile_shape,
     dtype, order) signature share device batches — the decode-side
     mirror of compress_many's request coalescing.  ``group_cb`` mirrors
@@ -472,13 +505,14 @@ def decompress_many(blobs, plan: CompressionPlan | None = None,
         c = bitstream.read_container_v2(b)
         layout = container_layout(c)
         parsed.append((c, layout, list(range(layout.n_tiles))))
-    values = _decode_runs(parsed, plan, group_cb)
+    values = _decode_runs(parsed, plan, group_cb, decode_path)
     return [_assemble_field(v, c, layout)
             for v, (c, layout, _) in zip(values, parsed)]
 
 
 def decompress_roi(blob: bytes, region: tuple[slice, ...],
-                   plan: CompressionPlan | None = None) -> np.ndarray:
+                   plan: CompressionPlan | None = None,
+                   decode_path: str = "auto") -> np.ndarray:
     """Partial decode: reconstruct only ``region`` of the field.
 
     ``region`` has exactly one slice per *original* field dimension
@@ -505,7 +539,7 @@ def decompress_roi(blob: bytes, region: tuple[slice, ...],
     c = bitstream.read_container_v2(blob)
     layout = container_layout(c)
     tile_ids = tiles_for_region(layout, region)
-    values = decode_tiles_for_region(c, tile_ids, plan)
+    values = decode_tiles_for_region(c, tile_ids, plan, decode_path)
     return region_from_tiles(c, layout, region, dict(zip(tile_ids, values)))
 
 

@@ -29,13 +29,17 @@ the counters next to MB/s so the resident path's win stays visible.
 
 Resident capacity
 -----------------
-Group tile counts pad up to a bucket: one shared bucket at or below the
-floor (mixed small fields never retrace), multiples of 4 above it
-(pad-tile compute waste bounded at 3 tiles).  Groups whose tile count
-lands in one warm bucket share every trace; the probe tests push mixed
-shapes/dtypes through one bucket and assert the trace counter does not
-move, and push varied shapes through many and assert steady state adds
-nothing.
+Group tile counts pad up to a *capacity class* ``floor * 2**k`` from the
+closed bucket registry (``engine.buckets``): batches larger than the
+packing cap split into chunks at request boundaries (compress) or tile
+boundaries (decode), so the set of trace keys a deployment can touch is
+enumerable and prewarmable — steady-state serving is zero-retrace at
+any load mix.  Chunking never changes bytes: halo exchange only spans a
+single request's tiles and decode tiles are independent, so a chunk
+boundary between requests is invisible to the streams.  The probe tests
+push mixed shapes/dtypes through one bucket and assert the trace
+counter does not move, and push varied shapes through many and assert
+steady state adds nothing.
 """
 from __future__ import annotations
 
@@ -49,7 +53,7 @@ import numpy as np
 
 from ..core import bitstream
 from ..core.quantize import bin_dtype_for
-from . import device, halo
+from . import buckets, device, halo
 from .plan import CompressionPlan, TileLayout
 
 TRANSFER_COUNTS: Counter = Counter()
@@ -72,7 +76,16 @@ _CHUNK_WORDS = {2: 8192, 4: 4096, 8: 2048}  # word bytes -> words / 16 KiB
 # Every halved width halves the chunk rows and bit-planes of the
 # dominant BIT/RZE stage on both ends of the pipeline.
 
-CAPACITY_FLOOR = 8
+CAPACITY_FLOOR = buckets.CAPACITY_FLOOR
+
+DECODE_PATHS = ("staged", "fused", "auto")
+
+# decode_path="auto" picks the fused kernel once a batch clears this
+# many padded elements (capacity * tile_elems); below it the staged
+# chain's per-dispatch overhead is already amortized and its larger
+# per-op batches win on CPU.  Crossover bracketed via engine_bench:
+# 512k-elem batches still favor staged, 768k+ favor fused.
+FUSED_AUTO_MIN_ELEMS = 768 * 1024
 
 
 def reset_transfer_counts() -> None:
@@ -94,18 +107,17 @@ def transfer_count(*keys: str) -> int:
 
 
 def resident_capacity(n_tiles: int, floor: int = CAPACITY_FLOOR) -> int:
-    """Resident-batch bucket for a group of ``n_tiles`` tiles.
+    """Resident-batch capacity class for a group of ``n_tiles`` tiles.
 
-    Everything at or below ``floor`` shares one bucket (the shape-mix
-    serving case: mixed small fields never retrace); above it, buckets
-    are multiples of 4, bounding pad-tile compute waste at 3 tiles —
-    each distinct bucket is one extra trace of the fused program, paid
-    once and then warm for every group of a similar size.
+    Everything at or below ``floor`` shares one class (the shape-mix
+    serving case: mixed small fields never retrace); above it, classes
+    double — ``floor * 2**k`` — so the registry is *closed* under the
+    executor's packing cap and each class is one trace of the fused
+    programs, paid once (or prewarmed) and then warm for every group
+    that lands in it.  Pad-tile compute waste is bounded at 2x and is
+    reported via ``buckets.pad_waste`` / the service metrics.
     """
-    floor = max(4, floor)
-    if n_tiles <= floor:
-        return floor
-    return -(-n_tiles // 4) * 4
+    return buckets.bucket_capacity(n_tiles, floor)
 
 
 def chunks_per_tile(layout: TileLayout, bdt) -> tuple[int, int]:
@@ -133,17 +145,26 @@ class Executor:
     ``solver`` selects the subbin schedule (``auto``/``jacobi``/
     ``frontier``/``blockwise``) — schedules differ in speed only; the
     least fixed point is schedule-independent, so all of them emit
-    byte-identical containers (tested).  ``put`` optionally places each
-    uploaded array (e.g. a NamedSharding put from
-    distributed.compression); placement never changes bytes either.
+    byte-identical containers (tested).  ``decode_path`` selects the
+    decompress backend the same way: ``staged`` runs the PR-2 chain of
+    jitted stage programs, ``fused`` the single-dispatch Pallas kernel
+    (``kernels.fused_decode``; f32 ordered decode only — other cases
+    fall back to staged), ``auto`` picks per batch.  Both are
+    bit-identical (tested against the determinism manifest).  ``put``
+    optionally places each uploaded array (e.g. a NamedSharding put
+    from distributed.compression); placement never changes bytes
+    either.
     """
 
     def __init__(self, plan: CompressionPlan, solver: str = "auto",
-                 put=None):
+                 put=None, decode_path: str = "auto"):
         if solver not in device.SOLVERS:
             raise ValueError(f"unknown solver method {solver!r}")
+        if decode_path not in DECODE_PATHS:
+            raise ValueError(f"unknown decode path {decode_path!r}")
         self.plan = plan
         self.solver = solver
+        self.decode_path = decode_path
         self.put = put or (lambda a: jnp.asarray(a))
 
     # ------------------------------------------------------------ compress
@@ -163,55 +184,93 @@ class Executor:
         """
         layout0 = layouts[0]
         n_total = x_tiles.shape[0]
-        capacity = resident_capacity(n_total, max(CAPACITY_FLOOR,
-                                                  self.plan.batch_tiles))
+        floor = max(CAPACITY_FLOOR, self.plan.batch_tiles)
         bins_store = np.dtype(bins_store or bin_dtype_for(dtype))
         bins_cpt, bins_chunk = chunks_per_tile(layout0, bins_store)
-        idx, mask = halo.group_index(layouts, capacity)
-
-        pad = capacity - n_total
-        if pad:
-            x_tiles = np.concatenate([
-                x_tiles,
-                np.full((pad,) + x_tiles.shape[1:], np.nan, x_tiles.dtype),
-            ])
-            eps_tiles = np.concatenate([eps_tiles, np.ones(pad, np.float64)])
+        sizes = tuple(lay.n_tiles for lay in layouts)
+        offsets = np.concatenate([[0], np.cumsum(sizes)]).astype(int)
+        spans = buckets.plan_request_chunks(sizes, floor)
 
         solver, interpret = device.resolve_solver(self.solver)
-        TRANSFER_COUNTS["h2d_tiles"] += 1
-        x_dev = self.put(x_tiles)
-        TRANSFER_COUNTS["h2d_aux"] += 3
-        eps_dev = self.put(eps_tiles)
-        idx_dev = self.put(idx)
-        mask_dev = self.put(mask)
-        max_rounds = jnp.asarray(n_total * layout0.tile_elems + 2, jnp.int64)
+        chunks = []
+        for lo, hi in spans:
+            r0, r1 = int(offsets[lo]), int(offsets[hi])
+            n_chunk = r1 - r0
+            capacity = resident_capacity(n_chunk, floor)
+            idx, mask = halo.group_index(layouts[lo:hi], capacity)
+            xc, ec = x_tiles[r0:r1], eps_tiles[r0:r1]
+            pad = capacity - n_chunk
+            if pad:
+                xc = np.concatenate([
+                    xc, np.full((pad,) + xc.shape[1:], np.nan, xc.dtype),
+                ])
+                ec = np.concatenate([ec, np.ones(pad, np.float64)])
+            TRANSFER_COUNTS["h2d_tiles"] += 1
+            x_dev = self.put(xc)
+            TRANSFER_COUNTS["h2d_aux"] += 3
+            eps_dev = self.put(ec)
+            idx_dev = self.put(idx)
+            mask_dev = self.put(mask)
+            max_rounds = jnp.asarray(n_chunk * layout0.tile_elems + 2,
+                                     jnp.int64)
+            bins_s, sub_dev, local1, last_round, sub_max = \
+                device.resident_compress(
+                    x_dev, eps_dev, idx_dev, mask_dev, max_rounds,
+                    dtype=jnp.dtype(dtype), preserve_order=preserve_order,
+                    solver=solver, interpret=interpret,
+                    local_max_iters=layout0.tile_elems + 2,
+                    bins_store=jnp.dtype(bins_store), bins_chunk=bins_chunk,
+                )
+            buckets.record_batch("compress", n_chunk, capacity)
+            chunks.append([n_chunk, capacity, bins_s, sub_dev, local1,
+                           last_round, sub_max])
 
-        bins_s, sub_dev, local1, last_round, sub_max = device.resident_compress(
-            x_dev, eps_dev, idx_dev, mask_dev, max_rounds,
-            dtype=jnp.dtype(dtype), preserve_order=preserve_order,
-            solver=solver, interpret=interpret,
-            local_max_iters=layout0.tile_elems + 2,
-            bins_store=jnp.dtype(bins_store), bins_chunk=bins_chunk,
-        )
-        subs_s = None
         subs_cpt = 0
         if preserve_order:
-            TRANSFER_COUNTS["d2h_aux"] += 1  # one scalar at the solve sync
-            sub_store = (np.dtype(np.int16) if int(sub_max) < 2**15
+            # one scalar sync per chunk; the width is picked from the
+            # *group* maximum so chunking never changes the sub stream
+            TRANSFER_COUNTS["d2h_aux"] += len(chunks)
+            sub_top = max(int(c[6]) for c in chunks)
+            sub_store = (np.dtype(np.int16) if sub_top < 2**15
                          else np.dtype(np.int32))
             subs_cpt, subs_chunk = chunks_per_tile(layout0, sub_store)
-            subs_s = device.encode_tiles(
-                sub_dev.astype(jnp.dtype(sub_store)).reshape(capacity, -1),
-                subs_chunk, "raw",
-            )
+            for c in chunks:
+                c.append(device.encode_tiles(
+                    c[3].astype(jnp.dtype(sub_store)).reshape(c[1], -1),
+                    subs_chunk, "raw",
+                ))
+        else:
+            for c in chunks:
+                c.append(None)
         TRANSFER_COUNTS["d2h_sections"] += 1
-        bins_s, subs_s, local1, last_round = jax.device_get(
-            (bins_s, subs_s, local1, last_round)
-        )
+        host = jax.device_get([(c[2], c[7], c[4], c[5]) for c in chunks])
+        ns = [c[0] for c in chunks]
+        bins_s = _cat_streams([h[0] for h in host], ns, bins_cpt)
+        subs_s = (_cat_streams([h[1] for h in host], ns, subs_cpt)
+                  if preserve_order else None)
+        local1 = np.concatenate([h[2][:n] for h, n in zip(host, ns)])
+        last_round = np.concatenate([h[3][:n] for h, n in zip(host, ns)])
         return GroupStreams(bins_s, subs_s, local1, last_round, bins_cpt,
                             subs_cpt)
 
     # ------------------------------------------------------------- decode
+
+    def use_fused(self, dtype, order: bool) -> bool:
+        """Can this (dtype, order) signature take the fused kernel?
+
+        The fused kernel covers the hot serving case — f32 ordered
+        decode — and falls back to the staged chain elsewhere (f64
+        needs x64-dependent base math, plain decode is rare).  Both
+        paths are bit-identical, so path choice is purely a speed pick:
+        ``auto`` additionally requires the batch to clear
+        ``FUSED_AUTO_MIN_ELEMS`` (below it, per-dispatch overhead beats
+        the staged chain's three dispatches on CPU interpret runs).
+        """
+        if self.decode_path == "staged" or not order:
+            return False
+        if np.dtype(dtype) != np.float32:
+            return False
+        return True
 
     def decode_items(self, items, tile: tuple[int, int, int], dtype,
                      order: bool, words: tuple[int, int]) -> np.ndarray:
@@ -223,7 +282,10 @@ class Executor:
         mirroring the compress side's request coalescing.  ``words`` is
         the (bins, subs) section word width in bytes, read from the
         containers (old int64-width blobs decode through the same path).
-        One stream upload, one resident decode chain, one value download.
+        Work-lists larger than the packing cap split into balanced
+        chunks (tiles are independent); each chunk is one stream upload,
+        one resident decode — staged or fused per ``decode_path`` — and
+        one value download.
         """
         dtype = np.dtype(dtype)
         tile_elems = int(np.prod(tile))
@@ -231,10 +293,32 @@ class Executor:
             # header flags promise a subbin stream the sections lack
             raise ValueError("corrupt LOPC container (missing subbin stream)")
         n = len(items)
+        if not n:
+            return np.zeros((0,) + tuple(tile), dtype)
         DECODE_COUNTS["tiles"] += n
+        floor = max(CAPACITY_FLOOR, self.plan.batch_tiles)
+        fusable = self.use_fused(dtype, order)
+        parts = []
+        pos = 0
+        for n_chunk in buckets.plan_tile_chunks(n, floor):
+            batch = resident_capacity(n_chunk, floor)
+            fused = fusable and (self.decode_path == "fused"
+                                 or batch * tile_elems
+                                 >= FUSED_AUTO_MIN_ELEMS)
+            parts.append(self._decode_chunk(
+                items[pos : pos + n_chunk], tile_elems, dtype, order,
+                words, batch, fused,
+            ))
+            pos += n_chunk
+        out = parts[0] if len(parts) == 1 else np.concatenate(parts)
+        return out.reshape((n,) + tuple(tile))
+
+    def _decode_chunk(self, items, tile_elems: int, dtype, order: bool,
+                      words: tuple[int, int], batch: int,
+                      fused: bool) -> np.ndarray:
+        n = len(items)
         DECODE_COUNTS["batches"] += 1
-        batch = resident_capacity(n, max(CAPACITY_FLOOR,
-                                         self.plan.batch_tiles))
+        buckets.record_batch("decode", n, batch)
 
         def alloc(word):
             chunk_len = _CHUNK_WORDS[word]
@@ -256,7 +340,14 @@ class Executor:
                 _fill_rows(sub_bitmap, sub_packed, sub_b, j * subs_cpt,
                            subs_cpt)
         TRANSFER_COUNTS["h2d_sections"] += 1
-        if order:
+        if order and fused:
+            out = device.resident_decode_fused(
+                self.put(bitmap), self.put(packed),
+                self.put(sub_bitmap), self.put(sub_packed),
+                self.put(eps), tile_elems=tile_elems,
+                dtype=jnp.dtype(dtype),
+            )
+        elif order:
             out = device.resident_decode_order(
                 self.put(bitmap), self.put(packed),
                 self.put(sub_bitmap), self.put(sub_packed),
@@ -269,7 +360,7 @@ class Executor:
                 tile_elems=tile_elems, dtype=jnp.dtype(dtype),
             )
         TRANSFER_COUNTS["d2h_values"] += 1
-        return np.asarray(out)[:n].reshape((n,) + tuple(tile))
+        return np.asarray(out)[:n]
 
 
 def _fill_rows(bitmap: np.ndarray, packed: np.ndarray, section: bytes,
@@ -287,7 +378,17 @@ def _fill_rows(bitmap: np.ndarray, packed: np.ndarray, section: bytes,
     packed[row0 : row0 + pk.shape[0]] = pk
 
 
+def _cat_streams(parts, ns, cpt):
+    """Concatenate per-chunk encoded streams, keeping only real-tile
+    chunk rows so downstream ``j * cpt`` section slicing is unchanged."""
+    sliced = [tuple(a[: n * cpt] for a in p) for p, n in zip(parts, ns)]
+    if len(sliced) == 1:
+        return sliced[0]
+    return tuple(np.concatenate(cols) for cols in zip(*sliced))
+
+
 @lru_cache(maxsize=64)
-def default_executor(plan: CompressionPlan, solver: str) -> Executor:
+def default_executor(plan: CompressionPlan, solver: str,
+                     decode_path: str = "auto") -> Executor:
     """Shared executors for the common no-custom-put case."""
-    return Executor(plan, solver)
+    return Executor(plan, solver, decode_path=decode_path)

@@ -1,9 +1,33 @@
-"""Pallas TPU kernel: fused LOPC decode (paper §IV-D "embarrassingly
+"""Pallas kernel: fused LOPC decode (paper §IV-D "embarrassingly
 parallel" decompression path).
 
-reconstruct = k-th representable float above base(bin), k = subbin —
-realized as ordered-int bit arithmetic (core/floatbits.py) fused with the
-base computation into a single VPU pass.  FF32 contract (ref.py).
+Two entry points share the file:
+
+``decode_tiles_fused``
+    The engine's fused decompress backend (``decode_path="fused"``):
+    RZE-expand -> bitshuffle-undo -> dezigzag/undelta -> dequantize in
+    ONE kernel, gridded over tile blocks.  On a TPU each grid step
+    touches one tile's chunk rows (~16 KiB per stream) and writes its
+    values; in interpret mode the whole batch rides one grid step (one
+    dispatch instead of the staged chain's three, with the full decode
+    chain fused into a single XLA computation).  Bit-for-bit identity
+    with the staged chain is
+    free by construction: the kernel body calls the *same* codec and
+    quantize functions (``rze_decode``, ``bitunshuffle``,
+    ``zigzag_decode``/``delta_decode``, ``decode_base``, ordered-int
+    float walk) the stage programs call, all of which are integer-exact
+    or contractually f32-deterministic; tests pin it against the
+    determinism manifest.  f32 only — f64 decode stays on the staged
+    chain (its base math is x64-config-dependent in exactly the way the
+    shared ``decode_base`` encodes, but the fused path has no need to
+    cover a cold case).
+
+``dequantize_ff32``
+    The original FF32-contract dequantize microkernel (reconstruct =
+    k-th representable float above base(bin), k = subbin, as ordered-int
+    bit arithmetic per ref.py).  Kept as the minimal on-TPU exemplar and
+    for the kernel-vs-oracle tests; any row count works (rows pad to
+    BLOCK_ROWS internally and the result slices back).
 """
 from __future__ import annotations
 
@@ -14,9 +38,92 @@ from jax import lax
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ..codecs.bitshuffle import bitunshuffle
+from ..codecs.rze import rze_decode
+from ..codecs.transforms import delta_decode, zigzag_decode
+from ..core.floatbits import float_to_ordered, int_dtype_for, ordered_to_float
+from ..core.quantize import decode_base
+
 LANE = 128
 BLOCK_ROWS = 256
 
+
+# ------------------------------------------------- fused decode pipeline
+
+def _expand_ints(bitmap, packed, n_tiles: int, tile_elems: int,
+                 transform: str):
+    """One block's section rows -> (n_tiles, tile_elems) signed ints.
+
+    Op-for-op the stage programs' ``_decode_ints``: every call here is
+    the same function the staged chain jits, so the integers match
+    bit-for-bit.
+    """
+    shuffled = rze_decode(bitmap, packed)
+    words = bitunshuffle(shuffled)
+    if transform == "delta":
+        chunks = delta_decode(zigzag_decode(words))
+    else:  # "raw"
+        chunks = words.astype(jnp.dtype(words.dtype.str.replace("u", "i")))
+    rows, chunk_len = chunks.shape
+    cpt = rows // n_tiles
+    return chunks.reshape(n_tiles, cpt * chunk_len)[:, :tile_elems]
+
+
+def decode_tiles_fused(bitmap, packed, sub_bitmap, sub_packed, eps,
+                       tile_elems: int, dtype, interpret: bool = False,
+                       block_tiles: int | None = None):
+    """Fused ordered decode of a tile batch -> (batch, tile_elems).
+
+    Inputs mirror ``device.resident_decode_order``: RZE sections as
+    (batch * cpt, ...) bitmap/packed word arrays (bins delta-coded,
+    subbins raw), per-tile ``eps`` riding SMEM.  ``block_tiles`` sets
+    the grid granularity — tiles per kernel invocation.  Default: the
+    whole batch in interpret mode (one dispatch; the grid loop would
+    serialize work XLA otherwise threads across the batch) and one tile
+    per step on real TPUs (grid parallelism, ~16 KiB VMEM blocks per
+    stream).  Batch capacities are bucket classes (``engine.buckets``),
+    so any pow2 ``block_tiles`` divides them.
+    """
+    dtype = jnp.dtype(dtype)
+    batch = eps.shape[0]
+    if block_tiles is None:
+        block_tiles = batch if interpret else 1
+    if batch % block_tiles:
+        raise ValueError(f"block_tiles {block_tiles} must divide {batch}")
+    bins_cpt = bitmap.shape[0] // batch
+    subs_cpt = sub_bitmap.shape[0] // batch
+    idt = int_dtype_for(dtype)
+
+    def kernel(eps_ref, bm_ref, pk_ref, sbm_ref, spk_ref, out_ref):
+        bins = _expand_ints(bm_ref[...], pk_ref[...], block_tiles,
+                            tile_elems, "delta")
+        subs = _expand_ints(sbm_ref[...], spk_ref[...], block_tiles,
+                            tile_elems, "raw")
+        base = decode_base(bins, eps_ref[...][:, None], dtype)
+        out_ref[...] = ordered_to_float(
+            float_to_ordered(base) + subs.astype(idt), dtype
+        )
+
+    def rows(arr, cpt):
+        return pl.BlockSpec((block_tiles * cpt, arr.shape[1]),
+                            lambda i: (i, 0))
+
+    return pl.pallas_call(
+        kernel,
+        grid=(batch // block_tiles,),
+        in_specs=[
+            pl.BlockSpec((block_tiles,), lambda i: (i,),
+                         memory_space=pltpu.SMEM),
+            rows(bitmap, bins_cpt), rows(packed, bins_cpt),
+            rows(sub_bitmap, subs_cpt), rows(sub_packed, subs_cpt),
+        ],
+        out_specs=pl.BlockSpec((block_tiles, tile_elems), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((batch, tile_elems), dtype),
+        interpret=interpret,
+    )(eps, bitmap, packed, sub_bitmap, sub_packed)
+
+
+# ------------------------------------------- FF32 dequantize microkernel
 
 def _decode_kernel(eps_ref, bins_ref, sub_ref, out_ref):
     eps = eps_ref[0]
@@ -31,17 +138,26 @@ def _decode_kernel(eps_ref, bins_ref, sub_ref, out_ref):
 
 
 def dequantize_ff32(bins2d, sub2d, eps32, interpret: bool = False):
-    """(R, 128) int32 bins + subbins -> f32 reconstruction."""
+    """(R, 128) int32 bins + subbins -> f32 reconstruction.
+
+    Any row count works: rows pad up to a BLOCK_ROWS multiple (pad rows
+    decode garbage nobody reads) and the result slices back to R.
+    """
     rows = bins2d.shape[0]
     assert bins2d.shape == sub2d.shape and bins2d.shape[1] == LANE
-    assert rows % BLOCK_ROWS == 0
-    grid = (rows // BLOCK_ROWS,)
+    pad = -rows % BLOCK_ROWS
+    if pad:
+        bins2d = jnp.concatenate(
+            [bins2d, jnp.zeros((pad, LANE), bins2d.dtype)])
+        sub2d = jnp.concatenate([sub2d, jnp.zeros((pad, LANE), sub2d.dtype)])
+    grid = ((rows + pad) // BLOCK_ROWS,)
     spec = pl.BlockSpec((BLOCK_ROWS, LANE), lambda i: (i, 0))
-    return pl.pallas_call(
+    out = pl.pallas_call(
         _decode_kernel,
         grid=grid,
         in_specs=[pl.BlockSpec(memory_space=pltpu.SMEM), spec, spec],
         out_specs=spec,
-        out_shape=jax.ShapeDtypeStruct((rows, LANE), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((rows + pad, LANE), jnp.float32),
         interpret=interpret,
     )(eps32.reshape(1).astype(jnp.float32), bins2d, sub2d)
+    return out[:rows]

@@ -86,6 +86,7 @@ def serve_compression(args):
         plan=CompressionPlan(tile_shape=_parse_tile(args.tile),
                              batch_tiles=args.batch_tiles),
         solver=args.solver,
+        decode_path=args.decode_path,
         max_delay_ms=args.max_delay_ms,
         max_batch_requests=args.max_batch,
         max_queue=args.max_queue,
@@ -186,6 +187,15 @@ def serve_compression(args):
     print(f"  traces     +{engine.device.trace_count() - trace0} after "
           f"warmup (new (tile, capacity, dtype) buckets only; a warm "
           f"shape mix adds 0)")
+    pad_real = m.bucket_real_tiles - m0.bucket_real_tiles
+    pad_dead = m.bucket_padded_tiles - m0.bucket_padded_tiles
+    caps = {c: m.bucket_batches.get(c, 0) - m0.bucket_batches.get(c, 0)
+            for c in sorted(m.bucket_batches)
+            if m.bucket_batches.get(c, 0) - m0.bucket_batches.get(c, 0)}
+    print(f"  buckets    pad waste "
+          f"{pad_dead / pad_real if pad_real else 0.0:.2f} "
+          f"({pad_dead} padded / {pad_real} real tiles) over "
+          f"capacities {caps}")
     print(f"  transfers  {m.transfers}")
     print(f"  rejections {m.rejected - m0.rejected} "
           f"(backpressure, retried by clients)")
@@ -215,6 +225,7 @@ def serve_store(args):
         plan=CompressionPlan(tile_shape=_parse_tile(args.tile),
                              batch_tiles=args.batch_tiles),
         solver=args.solver,
+        decode_path=args.decode_path,
         max_delay_ms=args.max_delay_ms,
         max_batch_requests=args.max_batch,
         max_queue=args.max_queue,
@@ -410,6 +421,12 @@ def main():
                     choices=["auto", "jacobi", "frontier", "blockwise"],
                     help="compression service: subbin schedule (speed "
                          "only; bytes are schedule-independent)")
+    ap.add_argument("--decode-path", default="auto",
+                    choices=["staged", "fused", "auto"],
+                    help="decompress kernel path: staged program chain, "
+                         "the fused Pallas decode kernel, or auto "
+                         "(fused above a measured batch-size crossover; "
+                         "bytes are path-independent)")
     args = ap.parse_args()
 
     if args.store:

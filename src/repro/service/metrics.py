@@ -43,6 +43,11 @@ class ServiceMetrics:
     max_batch_occupancy: int = 0
     device_groups: int = 0
     mean_device_group_occupancy: float = 0.0
+    traces_added: int = 0                 # jit traces added by batches
+    bucket_real_tiles: int = 0            # tiles carried by device batches
+    bucket_padded_tiles: int = 0          # dead pad tiles in those batches
+    bucket_pad_waste: float = 0.0         # padded / real
+    bucket_batches: dict = field(default_factory=dict)  # capacity -> count
     store_reads: int = 0                  # store read requests served
     cache_hits: int = 0                   # decoded-tile cache, store reads
     cache_misses: int = 0
@@ -71,6 +76,10 @@ class ServiceMetrics:
             f"/ {self.cache_evictions} evictions over {self.store_reads} "
             f"store reads; {self.decoded_tiles_per_request:.2f} decoded "
             "tiles/request",
+            f"buckets    {self.traces_added} traces added; pad waste "
+            f"{self.bucket_pad_waste:.2f} ({self.bucket_padded_tiles} padded "
+            f"/ {self.bucket_real_tiles} real tiles) over capacities "
+            f"{self.bucket_batches}",
             f"throughput {self.mbps:.1f} MB/s busy; per kind {self.per_kind}",
             f"transfers  {self.transfers}",
         ]
@@ -99,6 +108,10 @@ class MetricsRecorder:
         self.cache_evictions = 0
         self.busy_seconds = 0.0
         self.payload_bytes = 0
+        self.traces_added = 0
+        self.bucket_real_tiles = 0
+        self.bucket_padded_tiles = 0
+        self.bucket_batches = Counter()
         self.per_kind = Counter()
         self.transfers = Counter()
 
@@ -120,7 +133,8 @@ class MetricsRecorder:
                 self.failed += 1
 
     def record_batch(self, n_requests: int, seconds: float,
-                     payload_bytes: int, transfers: dict) -> None:
+                     payload_bytes: int, transfers: dict,
+                     traces_added: int = 0) -> None:
         with self._lock:
             self.batches += 1
             self.occupancy_sum += n_requests
@@ -128,11 +142,18 @@ class MetricsRecorder:
             self.busy_seconds += seconds
             self.payload_bytes += payload_bytes
             self.transfers.update(transfers)
+            self.traces_added += traces_added
 
     def record_device_group(self, info: dict) -> None:
         with self._lock:
             self.device_groups += 1
             self.device_group_requests += int(info["n_requests"])
+            # bucket admission: the (real, capacity) device batches this
+            # group ran as (engine group_cb "tile_batches")
+            for n_real, capacity in info.get("tile_batches", ()):
+                self.bucket_real_tiles += int(n_real)
+                self.bucket_padded_tiles += int(capacity) - int(n_real)
+                self.bucket_batches[int(capacity)] += 1
 
     def record_store_read(self, info: dict) -> None:
         """One batched store read (``LopcStore.read_roi_many``'s
@@ -176,6 +197,14 @@ class MetricsRecorder:
                     self.device_group_requests / self.device_groups
                     if self.device_groups else 0.0
                 ),
+                traces_added=self.traces_added,
+                bucket_real_tiles=self.bucket_real_tiles,
+                bucket_padded_tiles=self.bucket_padded_tiles,
+                bucket_pad_waste=(
+                    self.bucket_padded_tiles / self.bucket_real_tiles
+                    if self.bucket_real_tiles else 0.0
+                ),
+                bucket_batches=dict(self.bucket_batches),
                 store_reads=self.store_reads,
                 cache_hits=self.cache_hits,
                 cache_misses=self.cache_misses,

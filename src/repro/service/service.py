@@ -69,6 +69,7 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from .. import engine, temporal
+from ..engine import device as engine_device
 from ..engine import executor as engine_executor
 from ..engine.plan import CompressionPlan
 from .metrics import MetricsRecorder, ServiceMetrics
@@ -95,22 +96,25 @@ class ServiceOverloaded(RuntimeError):
 class ServiceConfig:
     """Service tuning knobs.
 
-    ``plan``/``solver`` pin the one engine configuration every request
-    shares (the keyed program cache); ``max_delay_ms`` is the most a
-    lone request waits for company (latency floor under light load);
-    ``max_batch_requests`` caps a drained batch (latency ceiling under
-    heavy load); ``max_queue`` bounds memory and is the backpressure
-    threshold.
+    ``plan``/``solver``/``decode_path`` pin the one engine configuration
+    every request shares (the keyed program cache); ``max_delay_ms`` is
+    the most a lone request waits for company (latency floor under light
+    load); ``max_batch_requests`` caps a drained batch (latency ceiling
+    under heavy load); ``max_queue`` bounds memory and is the
+    backpressure threshold.
     """
 
     plan: CompressionPlan = field(default_factory=CompressionPlan)
     solver: str = "auto"
+    decode_path: str = "auto"
     max_batch_requests: int = 64
     max_delay_ms: float = 2.0
     max_queue: int = 512
     latency_window: int = 4096
 
     def __post_init__(self):
+        if self.decode_path not in ("staged", "fused", "auto"):
+            raise ValueError(f"unknown decode path {self.decode_path!r}")
         if self.max_batch_requests < 1:
             raise ValueError("max_batch_requests must be >= 1")
         if self.max_delay_ms < 0:
@@ -442,6 +446,7 @@ class CompressionService:
         rec = self.metrics_recorder
         t0 = time.monotonic()
         tc0 = dict(engine_executor.TRANSFER_COUNTS)
+        tr0 = engine_device.trace_count()
 
         # compress requests sharing (mode, preserve_order) share one
         # compress_many call, chain requests one compress_chains call
@@ -495,7 +500,7 @@ class CompressionService:
                 dec_items,
                 lambda ms, cb: engine.decompress_many(
                     [p.args[0] for p in ms], plan=self.config.plan,
-                    group_cb=cb,
+                    group_cb=cb, decode_path=self.config.decode_path,
                 ),
             )
         for members in sroi_groups.values():
@@ -520,8 +525,10 @@ class CompressionService:
         for p in per_item:
             try:
                 if p.kind == "roi":
-                    out = engine.decompress_roi(p.args[0], p.args[1],
-                                                plan=self.config.plan)
+                    out = engine.decompress_roi(
+                        p.args[0], p.args[1], plan=self.config.plan,
+                        decode_path=self.config.decode_path,
+                    )
                 elif p.kind == "frame":
                     out = temporal.decompress_frame(p.args[0], p.args[1],
                                                     plan=self.config.plan)
@@ -540,6 +547,7 @@ class CompressionService:
             len(batch), time.monotonic() - t0,
             sum(p.nbytes for p in batch),
             {k: tc1[k] - tc0.get(k, 0) for k in tc1 if tc1[k] - tc0.get(k, 0)},
+            traces_added=engine_device.trace_count() - tr0,
         )
 
     def _run_many(self, members: list[_Pending], fn, record=None) -> None:

@@ -15,7 +15,15 @@ import json
 import pytest
 
 from benchmarks.check_determinism import compare
-from benchmarks.check_regression import RATIO_TOL, check, extract_baseline, main
+from benchmarks.check_regression import (
+    RATIO_TOL,
+    SERVICE_LAT_HEADROOM,
+    check,
+    check_service,
+    extract_baseline,
+    extract_service_baseline,
+    main,
+)
 
 
 def _bench():
@@ -105,6 +113,87 @@ def test_gate_cli_end_to_end(tmp_path):
     bench["fields"]["miranda"]["engine"]["ratio"] *= 0.9
     bench_p.write_text(json.dumps(bench))
     assert main(["--bench", str(bench_p), "--baseline", str(base_p)]) == 1
+
+
+def _service_bench():
+    def point(clients, p50, p99, mbps):
+        return {"clients": clients, "p50_ms": p50, "p99_ms": p99,
+                "wall_mbps": mbps, "traces_added": 0}
+
+    return {
+        "eb": 0.01,
+        "plan": {"tile_shape": [16, 16, 64], "batch_tiles": 8},
+        "max_delay_ms": 5.0,
+        "requests_per_client": 4,
+        "load_points": [point(1, 30, 60, 1.2), point(4, 140, 210, 3.5),
+                        point(8, 220, 400, 2.8), point(16, 490, 800, 2.8)],
+    }
+
+
+def test_service_clean_bench_passes():
+    bench = _service_bench()
+    assert check_service(extract_service_baseline(bench), bench) == []
+
+
+def test_service_steady_state_retrace_fails():
+    bench = _service_bench()
+    baseline = extract_service_baseline(bench)
+    bench["load_points"][3]["traces_added"] = 1
+    problems = check_service(baseline, bench)
+    assert len(problems) == 1 and "steady state" in problems[0]
+
+
+def test_service_p99_collapse_fails():
+    # the PR-5 failure mode: p99 blows past the committed multiple of
+    # the reference pool's p99 under top load
+    bench = _service_bench()
+    baseline = extract_service_baseline(bench)
+    bench["load_points"][3]["p99_ms"] = 19_000.0
+    problems = check_service(baseline, bench)
+    assert any("ceiling" in p for p in problems)
+
+
+def test_service_p99_spread_headroom():
+    bench = _service_bench()
+    baseline = extract_service_baseline(bench)
+    # within headroom: spread grows but stays under committed x headroom
+    bench["load_points"][0]["p99_ms"] *= SERVICE_LAT_HEADROOM * 0.9
+    assert check_service(baseline, bench) == []
+    bench["load_points"][0]["p99_ms"] *= 1.3  # now beyond
+    assert any("spread" in p for p in check_service(baseline, bench))
+
+
+def test_service_throughput_floor_fails():
+    bench = _service_bench()
+    baseline = extract_service_baseline(bench)
+    bench["load_points"][3]["wall_mbps"] = 0.4  # < 0.5 x single client
+    assert any("throughput" in p for p in check_service(baseline, bench))
+
+
+def test_service_missing_point_and_config_drift_fail():
+    bench = _service_bench()
+    baseline = extract_service_baseline(bench)
+    drifted = copy.deepcopy(bench)
+    drifted["max_delay_ms"] = 50.0
+    assert any("config drifted" in p for p in check_service(baseline, drifted))
+    short = copy.deepcopy(bench)
+    short["load_points"] = short["load_points"][:2]
+    assert any("missing" in p for p in check_service(baseline, short))
+
+
+def test_service_gate_cli_end_to_end(tmp_path):
+    bench_p = tmp_path / "bench.json"
+    base_p = tmp_path / "baseline.json"
+    bench = _service_bench()
+    bench_p.write_text(json.dumps(bench))
+    assert main(["--service", "--bench", str(bench_p),
+                 "--baseline", str(base_p), "--update-baseline"]) == 0
+    assert main(["--service", "--bench", str(bench_p),
+                 "--baseline", str(base_p)]) == 0
+    bench["load_points"][3]["traces_added"] = 3
+    bench_p.write_text(json.dumps(bench))
+    assert main(["--service", "--bench", str(bench_p),
+                 "--baseline", str(base_p)]) == 1
 
 
 @pytest.mark.parametrize("mutate,expect", [

@@ -199,12 +199,82 @@ def test_decompress_roi_zero_volume(rng):
 # ----------------------------------------------------- executor plumbing
 
 def test_resident_capacity_buckets():
+    from repro.engine import buckets
+
     assert executor.resident_capacity(1) == executor.CAPACITY_FLOOR
     assert executor.resident_capacity(8) == 8
-    assert executor.resident_capacity(9) == 12
-    assert executor.resident_capacity(36) == 36
-    assert executor.resident_capacity(37) == 40
+    assert executor.resident_capacity(9) == 16
+    assert executor.resident_capacity(36) == 64
+    assert executor.resident_capacity(37) == 64
     assert executor.resident_capacity(3, floor=4) == 4
+    # every capacity a packed batch can take is in the closed class set
+    classes = buckets.capacity_classes(8)
+    assert classes == (8, 16, 32, 64, 128)
+    for n in range(1, buckets.packing_cap(8) + 1):
+        assert executor.resident_capacity(n) in classes
+
+
+def test_bucket_chunk_planning():
+    from repro.engine import buckets
+
+    cap = buckets.packing_cap(8)  # 128
+    # compress chunks split at request boundaries, never above the cap
+    sizes = [63, 63, 63, 4, 100, 1]
+    spans = buckets.plan_request_chunks(sizes, 8)
+    assert [tuple(s) for s in spans] == [(0, 2), (2, 4), (4, 6)]
+    assert all(sum(sizes[lo:hi]) <= cap for lo, hi in spans)
+    # an oversized single request rides a chunk of its own
+    assert buckets.plan_request_chunks([300, 2], 8) == [(0, 1), (1, 2)]
+    assert buckets.plan_request_chunks([], 8) == [(0, 0)]
+    # decode chunks balance: every chunk of an overflowing batch lands
+    # in the top two classes, so no small-residue classes appear under
+    # load that a prewarm pass didn't see
+    for n in (129, 200, 257, 1000):
+        chunks = buckets.plan_tile_chunks(n, 8)
+        assert sum(chunks) == n
+        assert all(cap // 2 <= c <= cap for c in chunks)
+    assert buckets.plan_tile_chunks(5, 8) == [5]
+    assert buckets.plan_tile_chunks(0, 8) == []
+
+
+def test_bucket_company_never_changes_bytes(rng):
+    """The bucket byte contract: the SAME request compressed alone, in
+    a half-full bucket, and in an exactly-full bucket (and beyond, into
+    chunk-split territory) emits identical container bytes — capacity
+    classes only pad device batches with masked dead tiles."""
+    from repro.engine import buckets
+
+    plan = CompressionPlan(tile_shape=(8, 8, 8), batch_tiles=4)
+    floor = max(buckets.CAPACITY_FLOOR, plan.batch_tiles)
+    x = rng.standard_normal((16, 8, 8))          # 2 tiles
+    mate = rng.standard_normal((8, 8, 8))        # 1 tile
+    alone = engine.compress(x, 1e-2, plan=plan)
+    # half-full bucket (3 of 8 tiles), exactly-full (x + 6 mates), and a
+    # group big enough to split into multiple capacity-class chunks
+    for n_mates in (1, floor - 2, 4 * buckets.packing_cap(floor)):
+        group = [x] + [mate] * n_mates
+        blobs = engine.compress_many(group, 1e-2, plan=plan)
+        assert blobs[0] == alone, f"bytes changed with {n_mates} mates"
+        assert all(b == blobs[1] for b in blobs[2:])
+    # decode side: the padded/chunked batches reproduce the same values
+    # whichever company the containers decode in
+    alone_y = engine.decompress(alone, plan=plan)
+    group_y = engine.decompress_many([alone] + [blobs[1]] * 5, plan=plan)
+    assert np.array_equal(group_y[0], alone_y)
+
+
+def test_decode_path_flag_is_value_identical(rng):
+    """staged / fused / auto decode paths return identical values (the
+    fused Pallas kernel is the same math, fused); unknown paths fail
+    fast."""
+    x = rng.standard_normal((24, 18, 12)).astype(np.float32)
+    blob = engine.compress(x, 1e-2)
+    outs = {p: engine.decompress(blob, decode_path=p)
+            for p in executor.DECODE_PATHS}
+    assert outs["fused"].tobytes() == outs["staged"].tobytes()
+    assert outs["auto"].tobytes() == outs["staged"].tobytes()
+    with pytest.raises(ValueError, match="decode path"):
+        executor.Executor(engine.CompressionPlan(), decode_path="warp")
 
 
 def test_sharded_executor_is_byte_identical(rng):

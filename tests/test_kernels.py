@@ -111,6 +111,48 @@ def test_subbin_sweep_matches_jacobi(rng, shape):
     assert np.array_equal(np.asarray(s_jacobi), np.asarray(s_ref))
 
 
+@pytest.mark.parametrize("rows", [1, 5, 255, 257, 300])
+def test_dequantize_ff32_any_row_count(rng, rows):
+    """The microkernel pads odd row counts internally (no BLOCK_ROWS
+    divisibility requirement on callers) and slices the result back."""
+    from repro.kernels import fused_decode
+
+    bins = rng.integers(-(2**20), 2**20,
+                        (rows, fused_decode.LANE)).astype(np.int32)
+    sub = rng.integers(0, 5, (rows, fused_decode.LANE)).astype(np.int32)
+    eps = jnp.float32(1e-2)
+    got = fused_decode.dequantize_ff32(jnp.asarray(bins), jnp.asarray(sub),
+                                       eps, interpret=True)
+    assert got.shape == (rows, fused_decode.LANE)
+    want = dequantize_ff32_ref(jnp.asarray(bins), jnp.asarray(sub), eps)
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_fused_decode_matches_staged_on_determinism_cases():
+    """decode_path="fused" (and "auto") must reproduce the staged chain
+    bit-for-bit on every case the determinism manifest pins — the same
+    24 generator/shape/dtype combinations whose container hashes CI
+    compares, so fused-vs-staged identity is checked exactly where a
+    numerics drift would also break the archived-bytes claim."""
+    from benchmarks.check_determinism import DTYPES, EB, SHAPES
+    from repro import engine
+    from repro.data.fields import FIELD_GENERATORS, make_scientific_field
+
+    for name in sorted(FIELD_GENERATORS):
+        for shape in SHAPES:
+            for dtype in DTYPES:
+                x = make_scientific_field(name, shape, np.dtype(dtype),
+                                          seed=5)
+                blob = engine.compress(x, EB)
+                case = (name, shape, dtype)
+                staged = engine.decompress(blob, decode_path="staged")
+                for path in ("fused", "auto"):
+                    y = engine.decompress(blob, decode_path=path)
+                    assert y.dtype == staged.dtype, case
+                    assert y.tobytes() == staged.tobytes(), \
+                        f"decode_path={path} diverged from staged on {case}"
+
+
 def test_subbin_sweep_long_chain_fewer_sweeps():
     """The point of block-local convergence: a chain spanning the whole
     X extent converges in ~X/BAND global sweeps, not ~X."""

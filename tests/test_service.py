@@ -146,6 +146,105 @@ def test_steady_state_adds_zero_traces(rng):
         "steady-state service traffic retraced a device program"
 
 
+def test_closed_buckets_zero_retrace_across_compositions(rng):
+    """The shape-bucketed admission guarantee PR-5 lacked: once the
+    closed capacity classes a shape family can reach are warm, traffic
+    with DIFFERENT request compositions (different group totals, hence
+    different padded capacities under the old scheme) adds zero traces.
+    Two measured passes use distinct mixes of the same shapes."""
+    from repro.engine import buckets
+
+    floor = max(buckets.CAPACITY_FLOOR, PLAN.batch_tiles)
+    one = rng.standard_normal((8, 8, 8))     # 1 tile under PLAN
+    two = rng.standard_normal((16, 8, 8))    # 2 tiles
+    # warm the classes these mixes can land in (totals <= 16 below):
+    # 8 and 16 for this (f64, tile (8,8,8)) signature
+    for total in (floor, 2 * floor):
+        blobs = engine.compress_many([one] * total, 1e-2, plan=PLAN)
+        engine.decompress_many(blobs, plan=PLAN)
+
+    def one_pass(fields):
+        svc = CompressionService(CFG, autostart=False)
+        blobs = _queue_then_start(
+            svc, [(svc.submit_compress, x, 1e-2) for x in fields]
+        )
+        svc.stop()
+        svc2 = CompressionService(CFG, autostart=False)
+        _queue_then_start(svc2, [(svc2.submit_decompress, b) for b in blobs])
+        svc2.stop()
+        return svc2.metrics().traces_added + svc.metrics().traces_added
+
+    # two different compositions: totals 7 (capacity 8) and 12 (16)
+    mixes = ([one] * 3 + [two] * 2, [two] * 5 + [one] * 2)
+    snapshot = dict(device.TRACE_COUNTS)
+    for mix in mixes:
+        assert one_pass(mix) == 0, "warm composition added a jit trace"
+    assert dict(device.TRACE_COUNTS) == snapshot
+
+
+def test_chain_bytes_survive_bucket_company(rng):
+    """Chain path of the bucket byte contract: a temporal chain
+    compressed through the service inside a shared, padded device batch
+    emits the same bytes as a direct solo ``temporal.compress_chain``;
+    its snapshot batch-mates keep their solo bytes too."""
+    frames = [np.cumsum(rng.standard_normal((8, 8, 8)), 0) * 0.1
+              for _ in range(3)]
+    mates = _mixed_fields(rng, n=4)
+    svc = CompressionService(CFG, autostart=False)
+    try:
+        results = _queue_then_start(
+            svc,
+            [(svc.submit_compress_chain, frames, 1e-2)]
+            + [(svc.submit_compress, x, 1e-2) for x in mates],
+        )
+        assert results[0] == temporal.compress_chain(frames, 1e-2, plan=PLAN)
+        for x, b in zip(mates, results[1:]):
+            assert b == engine.compress(x, 1e-2, plan=PLAN)
+        # the traffic really shared batches (company existed to pad)
+        assert svc.metrics().max_batch_occupancy == len(mates) + 1
+    finally:
+        svc.stop()
+
+
+def test_metrics_report_bucket_occupancy(rng):
+    """ServiceMetrics surfaces the bucket-admission counters: per-batch
+    trace deltas, real/padded tile split, per-capacity batch counts —
+    and the ``lines()`` report prints them."""
+    fields = _mixed_fields(rng)
+    svc = CompressionService(CFG, autostart=False)
+    try:
+        _queue_then_start(svc, [(svc.submit_compress, x, 1e-2)
+                                for x in fields])
+        m = svc.metrics()
+        assert m.bucket_real_tiles > 0
+        assert m.bucket_padded_tiles >= 0
+        assert m.bucket_pad_waste == pytest.approx(
+            m.bucket_padded_tiles / m.bucket_real_tiles)
+        assert m.bucket_batches and all(
+            cap in (8, 16, 32, 64, 128) for cap in m.bucket_batches)
+        assert m.traces_added >= 0
+        report = "\n".join(m.lines())
+        assert "pad waste" in report and "traces added" in report
+    finally:
+        svc.stop()
+
+
+def test_decode_path_config_is_validated_and_byte_neutral(rng):
+    """ServiceConfig.decode_path rejects unknown values and never
+    changes request bytes/values — staged and fused services agree."""
+    with pytest.raises(ValueError):
+        ServiceConfig(plan=PLAN, decode_path="warp")
+    x = rng.standard_normal((16, 16, 16)).astype(np.float32)
+    outs = {}
+    for path in ("staged", "fused"):
+        cfg = ServiceConfig(plan=PLAN, solver="auto", decode_path=path,
+                            max_delay_ms=5.0)
+        with CompressionService(cfg) as svc:
+            blob = svc.compress(x, 1e-2)
+            outs[path] = svc.decompress(blob)
+    assert outs["staged"].tobytes() == outs["fused"].tobytes()
+
+
 def test_poison_request_fails_alone(rng):
     good = rng.standard_normal((8, 8, 8))
     bad = np.arange(512, dtype=np.int32).reshape(8, 8, 8)  # not a float field
