@@ -10,7 +10,14 @@ Compares a fresh ``BENCH_engine.json`` against the committed baseline
   * any increase in a per-compress transfer counter — the resident
     executor's 1-upload/1-download contract; an extra host<->device
     crossing is an architectural regression even when MB/s happens to
-    look fine on the runner.
+    look fine on the runner;
+  * fused-encode download growth — ``encode_path="fused"`` exists to
+    shrink the compress D2H to the compacted stream size, so each
+    field's ``bytes_d2h_per_compress`` must stay within ``--ratio-tol``
+    of its committed value AND below ``ENCODE_D2H_PAYLOAD_CEILING``
+    (1.1x) of the same run's container size.  Stream bytes are
+    bit-deterministic, so growth is a real compaction leak (padding
+    granule, dead-word slip), not machine noise.
 
 ``--temporal`` instead gates a fresh ``BENCH_temporal.json`` against
 ``benchmarks/baselines/temporal_baseline.json``: every sequence's
@@ -88,6 +95,13 @@ SERVICE_BASELINE_PATH = (
 
 RATIO_TOL = 0.01
 
+# The tentpole transfer claim of the fused encode path: the compress
+# download (compacted streams + repeat-eliminated bitmaps + totals) may
+# exceed the serialized container by at most this factor — headroom for
+# the download granule's padding tail and the totals fetch, nothing
+# else.
+ENCODE_D2H_PAYLOAD_CEILING = 1.1
+
 # Service gate knobs.  Latency spreads are same-run ratios (p99/p50,
 # top-load p99 / reference p99) so runner speed cancels, but scheduling
 # jitter doesn't — hence generous multiplicative headroom on committed
@@ -115,6 +129,13 @@ def extract_baseline(bench: dict) -> dict:
                 "transfers_per_compress": dict(row["transfers_per_compress"]),
             }
             for name, row in bench["fields"].items()
+        },
+        "encode_paths": {
+            name: {
+                "payload_bytes": row["payload_bytes"],
+                "fused_bytes_d2h": row["fused"]["bytes_d2h_per_compress"],
+            }
+            for name, row in bench["encode_paths"]["fields"].items()
         },
     }
 
@@ -150,6 +171,29 @@ def check(baseline: dict, bench: dict, ratio_tol: float = RATIO_TOL) -> list[str
                     f"per compress (baseline {limit:g}) — the resident "
                     "1-upload/1-download contract regressed"
                 )
+    fresh = bench.get("encode_paths", {}).get("fields", {})
+    for name, base in baseline.get("encode_paths", {}).items():
+        row = fresh.get(name)
+        if row is None:
+            problems.append(f"{name}: field missing from encode_paths "
+                            "bench output")
+            continue
+        d2h = row["fused"]["bytes_d2h_per_compress"]
+        limit = base["fused_bytes_d2h"] * (1.0 + ratio_tol)
+        if d2h > limit:
+            problems.append(
+                f"{name}: fused-encode download grew to {d2h:.0f} bytes "
+                f"per compress (committed {base['fused_bytes_d2h']:.0f}) — "
+                "the device-side compaction is leaking dead words"
+            )
+        ceiling = ENCODE_D2H_PAYLOAD_CEILING * row["payload_bytes"]
+        if d2h > ceiling:
+            problems.append(
+                f"{name}: fused-encode download {d2h:.0f} bytes exceeds "
+                f"{ENCODE_D2H_PAYLOAD_CEILING:g}x the container size "
+                f"({row['payload_bytes']} bytes) — the compress download "
+                "is no longer ~compressed-size"
+            )
     return problems
 
 
@@ -436,8 +480,11 @@ def main(argv=None) -> int:
               f"p99/throughput within bounds")
     else:
         n = len(baseline["fields"])
+        n_enc = len(baseline.get("encode_paths", {}))
         print(f"bench regression gate passed: {n} fields within "
-              f"{args.ratio_tol:.1%} ratio tolerance, no transfer growth")
+              f"{args.ratio_tol:.1%} ratio tolerance, no transfer growth, "
+              f"{n_enc} fused-encode downloads within "
+              f"{ENCODE_D2H_PAYLOAD_CEILING:g}x payload")
     return 0
 
 

@@ -33,7 +33,10 @@ def bitshuffle(words: jnp.ndarray) -> jnp.ndarray:
     # Barrier: all W bit-plane extractions read `words`; without it XLA
     # rematerializes whatever produced the words into every plane.
     words = jax.lax.optimization_barrier(words)
-    shifts = jnp.arange(w - 1, -1, -1, dtype=dt)  # MSB-first pack weights
+    # MSB-first pack weights as a staged iota, not jnp.arange: this
+    # function also runs inside the fused Pallas encode kernel, which
+    # cannot capture array constants
+    shifts = jnp.array(w - 1, dt) - jax.lax.iota(dt, w)
     one = jnp.array(1, dt)
     planes = []
     for b in range(w):

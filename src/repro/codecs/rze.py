@@ -62,7 +62,9 @@ def rze_bitmap(words: jnp.ndarray):
     assert length % w == 0
     nz = words != 0
     counts = jnp.sum(nz, axis=1, dtype=jnp.int32)
-    shifts = jnp.arange(w - 1, -1, -1, dtype=dt)
+    # staged iota, not jnp.arange: this function also runs inside the
+    # fused Pallas encode kernel, which cannot capture array constants
+    shifts = jnp.array(w - 1, dt) - jax.lax.iota(dt, w)
     grouped = nz.astype(dt).reshape(n_chunks, length // w, w)
     bitmap = jnp.sum(grouped << shifts[None, None, :], axis=-1, dtype=dt)
     return bitmap, counts

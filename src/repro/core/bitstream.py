@@ -254,26 +254,13 @@ def _undo_final_rze(flag: int, payload: bytes) -> bytes:
     return np_unrze_bytes(bitmap, nz, n).tobytes()
 
 
-def serialize_rze_section(bitmap: np.ndarray, packed: np.ndarray,
-                          counts: np.ndarray, compacted: bool = True) -> bytes:
-    """Serialize device RZE output. counts are NOT stored (recomputed
-    from the bitmap popcount on decode).
-
-    ``compacted=False`` accepts the *raw* (uncompacted) word rows the
-    engine's executor downloads — the nonzero words are extracted here
-    with one boolean index, producing byte-identical sections without
-    the device-side compaction scatter.
-    """
-    n_chunks, chunk_len = packed.shape
-    word = packed.dtype.itemsize
-    # variable-length nonzero words per chunk
-    packed = np.ascontiguousarray(packed)
-    if compacted:
-        mask = np.arange(chunk_len)[None, :] < np.asarray(counts)[:, None]
-    else:
-        mask = packed != 0
-    data = packed[mask]
-    keepmap, kept = np_repeat_eliminate(np.ascontiguousarray(bitmap).reshape(-1))
+def _emit_rze_section(bitmap: np.ndarray, data: np.ndarray, n_chunks: int,
+                      chunk_len: int, word: int) -> bytes:
+    """Assemble one RZE section from its bitmap rows and the already-
+    compacted nonzero words (shared by both serializer entry points, so
+    raw-row and flat-compacted inputs emit identical bytes)."""
+    keepmap, kept = np_repeat_eliminate(
+        np.ascontiguousarray(bitmap).reshape(-1))
     inner = Writer()
     inner.lp(keepmap.tobytes())
     inner.lp(kept.tobytes())
@@ -283,6 +270,38 @@ def serialize_rze_section(bitmap: np.ndarray, packed: np.ndarray,
     w.pack("IIBB", n_chunks, chunk_len, word, flag)
     w.raw(payload)
     return w.getvalue()
+
+
+def serialize_rze_section(bitmap: np.ndarray, packed: np.ndarray,
+                          counts: np.ndarray, compacted: bool = True) -> bytes:
+    """Serialize device RZE output. counts are NOT stored (recomputed
+    from the bitmap popcount on decode).
+
+    ``compacted=False`` accepts the *raw* (uncompacted) word rows the
+    engine's staged executor path downloads — the nonzero words are
+    extracted here with one boolean index, producing byte-identical
+    sections without the device-side compaction scatter.
+    """
+    n_chunks, chunk_len = packed.shape
+    word = packed.dtype.itemsize
+    # variable-length nonzero words per chunk
+    packed = np.ascontiguousarray(packed)
+    if compacted:
+        mask = np.arange(chunk_len)[None, :] < np.asarray(counts)[:, None]
+    else:
+        mask = packed != 0
+    return _emit_rze_section(bitmap, packed[mask], n_chunks, chunk_len, word)
+
+
+def serialize_rze_section_flat(bitmap: np.ndarray, data: np.ndarray,
+                               chunk_len: int) -> bytes:
+    """Serialize from the device-compacted transport form: ``bitmap``
+    rows plus ``data``, the rows' nonzero words already front-packed in
+    row-major order (``device.compact_streams``).  The words a boolean
+    index over raw rows would extract are exactly these, in this order,
+    so sections equal :func:`serialize_rze_section` byte-for-byte."""
+    return _emit_rze_section(bitmap, data, bitmap.shape[0], chunk_len,
+                             bitmap.dtype.itemsize)
 
 
 def deserialize_rze_section(buf: bytes):

@@ -79,19 +79,30 @@ def decode_base(bins: jnp.ndarray, eps: float, dtype) -> jnp.ndarray:
     return jnp.where(v.astype(jnp.float64) < t, bumped, v)
 
 
-@partial(jax.jit, static_argnames=("dtype",))
-def _quantize_impl(x: jnp.ndarray, eps: jnp.ndarray, dtype) -> jnp.ndarray:
+def quantize_broadcast(x: jnp.ndarray, eps_b: jnp.ndarray, dtype) -> jnp.ndarray:
+    """The quantize op sequence with a broadcastable (e.g. per-tile) eps.
+
+    Not jitted: callers are themselves traced programs — the engine's
+    resident quantize stage and the fused Pallas encode kernel — and
+    inline this exact op sequence, so bins are bit-identical whichever
+    entry point runs.
+    """
     bdt = bin_dtype_for(dtype)
     xf = x.astype(jnp.float64)
-    b = jnp.round(xf / eps).astype(bdt)
+    b = jnp.round(xf / eps_b).astype(bdt)
     # Verify-and-correct: containment in [base(b), base(b+1)) under the
     # *same* float comparisons the decoder uses. Two passes cover the
     # worst realizable misplacement (|round error| <= 1 bin).
     for _ in range(2):
-        too_high = x < decode_base(b, eps, dtype)
-        too_low = x >= decode_base(b + 1, eps, dtype)
+        too_high = x < decode_base(b, eps_b, dtype)
+        too_low = x >= decode_base(b + 1, eps_b, dtype)
         b = b - too_high.astype(bdt) + too_low.astype(bdt)
     return b
+
+
+@partial(jax.jit, static_argnames=("dtype",))
+def _quantize_impl(x: jnp.ndarray, eps: jnp.ndarray, dtype) -> jnp.ndarray:
+    return quantize_broadcast(x, eps, dtype)
 
 
 def quantize(x: jnp.ndarray, eps_abs: float) -> jnp.ndarray:

@@ -47,7 +47,7 @@ from ..codecs.rze import rze_bitmap, rze_decode
 from ..codecs.transforms import delta_decode, delta_encode, zigzag_decode, zigzag_encode
 from ..core import topology
 from ..core.floatbits import float_to_ordered, int_dtype_for, ordered_to_float
-from ..core.quantize import bin_dtype_for, decode_base
+from ..core.quantize import decode_base, quantize_broadcast
 
 # Incremented inside traced function bodies: Python side effects run only
 # while tracing, so this counts jit traces, not executions.  Tests use it
@@ -229,14 +229,7 @@ def _resident_solve(flags, idx_m, mask_m, solver: str, interpret: bool,
 
 def _quantize_halo(x_h: jnp.ndarray, eps_b: jnp.ndarray, dtype) -> jnp.ndarray:
     """core.quantize._quantize_impl with a per-tile broadcast eps."""
-    bdt = bin_dtype_for(dtype)
-    xf = x_h.astype(jnp.float64)
-    b = jnp.round(xf / eps_b).astype(bdt)
-    for _ in range(2):
-        too_high = x_h < decode_base(b, eps_b, dtype)
-        too_low = x_h >= decode_base(b + 1, eps_b, dtype)
-        b = b - too_high.astype(bdt) + too_low.astype(bdt)
-    return b
+    return quantize_broadcast(x_h, eps_b, dtype)
 
 
 # ------------------------------------------------ lossless stage (shared)
@@ -380,24 +373,128 @@ def encode_tiles(ints, chunk_len: int, transform: str):
     return _encode_ints(ints, chunk_len, transform)
 
 
+@partial(jax.jit, static_argnames=("chunk_len", "transform", "interpret"))
+def _fused_encode_ints_program(ints, chunk_len: int, transform: str,
+                               interpret: bool):
+    TRACE_COUNTS["fused_encode"] += 1
+    from ..kernels.fused_encode import encode_ints_fused
+
+    return encode_ints_fused(ints, chunk_len, transform,
+                             interpret=interpret)
+
+
+def encode_tiles_fused(ints, chunk_len: int, transform: str):
+    """Single-dispatch alternative to ``encode_tiles``: the whole
+    transform -> BIT -> RZE-bitmap chain as one Pallas kernel gridded
+    over tiles (``kernels.fused_encode``).  Bit-identical to the staged
+    stage programs; interpret mode off-TPU like every kernel."""
+    _, interpret = resolve_solver("auto")
+    return _fused_encode_ints_program(ints, chunk_len, transform,
+                                      interpret)
+
+
+@partial(jax.jit,
+         static_argnames=("dtype", "bins_store", "bins_chunk", "interpret"))
+def _fused_encode_values_program(x_h, eps, dtype, bins_store,
+                                 bins_chunk: int, interpret: bool):
+    TRACE_COUNTS["fused_encode"] += 1
+    from ..kernels.fused_encode import encode_values_fused
+
+    capacity = x_h.shape[0]
+    x_int = _interior(x_h).reshape(capacity, -1)
+    return encode_values_fused(x_int, eps, bins_chunk, dtype, bins_store,
+                               interpret=interpret)
+
+
+def resident_encode_fused(x_h, eps, dtype, bins_store, bins_chunk: int):
+    """Full compress fusion for the plain (preserve_order=False) f32
+    path: NaN-validity -> quantize -> delta/zigzag -> BIT -> RZE-bitmap
+    as ONE Pallas kernel over the haloed tile batch.  Quantize is the
+    shared ``quantize_broadcast`` op sequence, so the bins — and hence
+    the streams — equal the staged frontend's bit-for-bit."""
+    _, interpret = resolve_solver("auto")
+    return _fused_encode_values_program(x_h, eps, jnp.dtype(dtype),
+                                        jnp.dtype(bins_store), bins_chunk,
+                                        interpret)
+
+
+@jax.jit
+def compact_streams(bitmap, words):
+    """Device-side stream compaction for the fused-encode download.
+
+    Packs the transfer-relevant content of one encoded stream into dense
+    buffers so the executor can download ~compressed-size bytes instead
+    of capacity-padded arrays:
+
+    - ``words_dense``: every nonzero word of ``words``, front-packed
+      globally in row-major order via the RZE prefix-sum scatter (one
+      unique-index scatter over the flat buffer).  Row-major global
+      order equals per-row compaction concatenated, so the host can
+      slice per-chunk runs back out with the per-row counts.
+    - ``kept_dense`` + ``keepmap``: the bitmap repeat-eliminated (the
+      serializer's ``np_repeat_eliminate`` on device, as one flat run —
+      transport-only: the host restores the exact bitmap, so downstream
+      bytes are unchanged) with the keep mask packed MSB-first.
+    - ``totals``: (total nonzero words, total kept bitmap words) int32 —
+      the one tiny fetch that sizes the real download.
+
+    Per-row counts are NOT transferred: they equal the bitmap rows'
+    popcount exactly (``rze_bitmap`` construction), which the host
+    recomputes from the restored bitmap.
+    """
+    TRACE_COUNTS["compact"] += 1
+
+    def front_pack(flat, live):
+        cum = jnp.cumsum(live, dtype=jnp.int32)
+        total = cum[-1]
+        cum_dead = jnp.cumsum(~live, dtype=jnp.int32)
+        dest = jnp.where(live, cum - 1, total + cum_dead - 1)
+        dense = jnp.zeros_like(flat).at[dest].set(flat,
+                                                  unique_indices=True)
+        return dense, total
+
+    flat_w = words.reshape(-1)
+    words_dense, total_words = front_pack(flat_w, flat_w != 0)
+    flat_b = bitmap.reshape(-1)
+    keep = jnp.concatenate(
+        [jnp.ones((1,), bool), flat_b[1:] != flat_b[:-1]])
+    kept_dense, total_kept = front_pack(flat_b, keep)
+    weights = jnp.array([128, 64, 32, 16, 8, 4, 2, 1], jnp.uint8)
+    keepmap = jnp.sum(keep.reshape(-1, 8).astype(jnp.uint8) * weights,
+                      axis=1, dtype=jnp.uint8)
+    totals = jnp.stack([total_words, total_kept]).astype(jnp.int32)
+    return keepmap, kept_dense, words_dense, totals
+
+
 def resident_compress(x_h, eps, idx, mask, max_rounds, dtype,
                       preserve_order: bool, solver: str, interpret: bool,
-                      local_max_iters: int, bins_store, bins_chunk: int):
+                      local_max_iters: int, bins_store, bins_chunk: int,
+                      encode_fused: bool = False):
     """Quantize -> flags -> solve -> bins encode over one resident batch.
 
     Chains the stage programs above; every intermediate is a device
     array, so nothing crosses the host boundary between quantize and the
     encoded RZE streams.  ``bins_store`` is the (host-chosen, possibly
-    narrowed) section word dtype for bins.  Returns ``((bins bitmap,
-    packed, counts), sub | None, local1, last_round, sub_max | None)``
-    with the *unencoded* subbins still resident — the executor reads the
-    ``sub_max`` scalar to pick the narrowest subbin width, then runs the
-    sub encode as one more device stage.
+    narrowed) section word dtype for bins.  ``encode_fused`` routes the
+    lossless stage through the fused Pallas encode kernel (and, for the
+    plain f32 case, fuses quantize into it too) — bit-identical either
+    way.  Returns ``((bins bitmap, packed, counts), sub | None, local1,
+    last_round, sub_max | None)`` with the *unencoded* subbins still
+    resident — the executor reads the ``sub_max`` scalar to pick the
+    narrowest subbin width, then runs the sub encode as one more device
+    stage.
     """
     capacity = x_h.shape[0]
+    if (encode_fused and not preserve_order
+            and jnp.dtype(dtype) == jnp.float32):
+        bins_streams = resident_encode_fused(x_h, eps, dtype, bins_store,
+                                             bins_chunk)
+        zc = jnp.zeros((capacity,), jnp.int32)
+        return bins_streams, None, zc, zc, None
     bins_enc, flags = resident_frontend(x_h, eps, jnp.dtype(dtype),
                                         preserve_order)
-    bins_streams = encode_tiles(
+    encode = encode_tiles_fused if encode_fused else encode_tiles
+    bins_streams = encode(
         bins_enc.astype(bins_store).reshape(capacity, -1), bins_chunk, "delta"
     )
     if not preserve_order:

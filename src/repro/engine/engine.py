@@ -163,9 +163,29 @@ def _serialize_tile_sections(streams, n_tiles: int, cpt: int):
     pay for rows of pure pad in every tile (the PR-1 per-tile ratio
     regression).  A zero chunk is exactly a zero count — decode
     reconstructs missing rows as zeros, so trimming is lossless.
+
+    Streams arrive in one of two forms, emitting identical bytes: raw
+    chunk rows from the staged download (``packed.ndim == 2``), or the
+    fused path's compacted transport form — front-packed nonzero words
+    plus popcount-derived counts — where each tile's words are a
+    prefix-sum slice of the flat data.
     """
     bitmap, packed, counts = (np.asarray(a) for a in streams)
     out = []
+    if packed.ndim == 1:
+        word = packed.dtype.itemsize
+        chunk_len = bitmap.shape[1] * word * 8
+        offsets = np.concatenate([[0], np.cumsum(counts)]).astype(np.int64)
+        for j in range(n_tiles):
+            rows = slice(j * cpt, (j + 1) * cpt)
+            nz = np.flatnonzero(counts[rows])
+            keep = int(nz[-1]) + 1 if nz.size else 0
+            out.append(bitstream.serialize_rze_section_flat(
+                bitmap[j * cpt : j * cpt + keep],
+                packed[offsets[j * cpt] : offsets[j * cpt + keep]],
+                chunk_len,
+            ))
+        return out
     for j in range(n_tiles):
         rows = slice(j * cpt, (j + 1) * cpt)
         nz = np.flatnonzero(counts[rows])
@@ -189,6 +209,7 @@ def compress_many(
     return_stats: bool = False,
     put=None,
     group_cb=None,
+    encode_path: str = "auto",
 ):
     """Compress a batch of scalar fields into v2 containers.
 
@@ -203,7 +224,9 @@ def compress_many(
     when given, is called once per device group with a summary dict
     (``kind``/``dtype``/``tile``/``n_requests``/``n_tiles``) — the hook
     the service layer uses to report per-batch device occupancy without
-    re-deriving the grouping.
+    re-deriving the grouping.  ``encode_path`` selects the compress
+    backend (``staged``/``fused``/``auto``, see ``executor.Executor``) —
+    paths are byte-identical, so it is purely a speed/transfer pick.
 
     Returns a list of blobs, or (blobs, stats) when ``return_stats``.
     """
@@ -217,7 +240,8 @@ def compress_many(
     if len(ebs) != len(fields):
         raise ValueError("eb must be a scalar or one bound per field")
     reqs = [_Request(x, e, mode, plan) for x, e in zip(fields, ebs)]
-    ex = Executor(plan, solver, put) if put else default_executor(plan, solver)
+    ex = (Executor(plan, solver, put, encode_path=encode_path) if put
+          else default_executor(plan, solver, encode_path=encode_path))
 
     groups: dict[tuple, list[int]] = {}
     for i, r in enumerate(reqs):
@@ -317,10 +341,10 @@ def _compress_group(reqs, dtype, ex: Executor, preserve_order, out, members,
 
 
 def compress(field, eb, mode="noa", preserve_order=True, solver="auto",
-             plan=None, return_stats=False, put=None):
+             plan=None, return_stats=False, put=None, encode_path="auto"):
     """Single-field convenience wrapper over :func:`compress_many`."""
     out = compress_many([field], eb, mode, preserve_order, solver, plan,
-                        return_stats, put)
+                        return_stats, put, encode_path=encode_path)
     if return_stats:
         blobs, stats = out
         return blobs[0], stats[0]

@@ -17,11 +17,18 @@ makes, by category:
 
   h2d_tiles      field-tile uploads (one per compress group)
   h2d_aux        small operands: eps vector + halo index tables
-  d2h_aux        the one sub-max scalar (subbin width pick, at the
-                 solve's natural sync point)
+  d2h_aux        tiny mid-pipeline fetches: the sub-max scalar (subbin
+                 width pick, at the solve's natural sync point) and the
+                 fused path's compacted-stream totals
   d2h_sections   encoded-stream downloads (one per compress group)
   h2d_sections   decode-side stream uploads (one per decode batch)
   d2h_values     decoded-value downloads (one per decode batch)
+
+plus two byte totals, ``bytes_h2d`` and ``bytes_d2h``, accumulating the
+payload sizes of every counted crossing — the proof that the fused
+encode path's compacted download actually shrinks the transfer to
+~compressed size (asserted against the serialized payload in tests and
+gated by ``benchmarks/check_regression.py``).
 
 Tests assert the compress invariant — exactly one ``h2d_tiles`` and one
 ``d2h_sections`` per group — and ``benchmarks/engine_bench.py`` records
@@ -51,6 +58,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..codecs import rze
 from ..core import bitstream
 from ..core.quantize import bin_dtype_for
 from . import buckets, device, halo
@@ -86,6 +94,53 @@ DECODE_PATHS = ("staged", "fused", "auto")
 # per-op batches win on CPU.  Crossover bracketed via engine_bench:
 # 512k-elem batches still favor staged, 768k+ favor fused.
 FUSED_AUTO_MIN_ELEMS = 768 * 1024
+
+ENCODE_PATHS = ("staged", "fused", "auto")
+
+# encode_path="auto" crossover (padded batch elements above which a real
+# accelerator takes the fused kernel + compacted download).  Measured on
+# CPU interpret via the encode_paths block of BENCH_engine.json: there
+# is NO crossover off-TPU — the compaction's prefix-sum scatter runs
+# 0.4-0.6x the staged path's wall clock at every size (XLA CPU scatter
+# is serial, while the staged download's host-side boolean index is a
+# vectorized memcpy) — so ``auto`` additionally requires a non-interpret
+# backend, where the dispatch fold and the ~5x smaller D2H are the
+# whole point.  Explicit ``fused`` is always honored (the byte-identity
+# and transfer-contract tests, and CPU users who want the download
+# shrink regardless of wall clock).
+FUSED_ENCODE_AUTO_MIN_ELEMS = 1024 * 1024
+
+# Compacted downloads fetch dense-buffer prefixes rounded up to this
+# many words, so the set of eager slice shapes the download dispatches
+# stays small while the padding tail stays well under a KiB per stream.
+# Measured bytes_d2h on the paper fields is ≤ 1.097x payload (worst:
+# qmcpack, the smallest container) vs the 1.1x acceptance gate; the
+# overhead floor is the repeat-eliminated bitmap transport (keepmap +
+# kept words run ~7x the bitmap's serialized form), NOT the tails, so
+# shrinking the granule further buys nothing.
+_DL_GRANULE_WORDS = 32
+
+
+def use_fused_encode(encode_path: str, padded_elems: int,
+                     interpret: bool) -> bool:
+    """Does this compress group take the fused encode kernel?
+
+    Unlike the decode pick, this is dtype-independent: the fused encode
+    kernel covers every (transform, word width) the staged
+    ``encode_tiles`` does, and the f64-sensitive quantize stage stays in
+    the staged frontend except for the plain-f32 full fusion (decided
+    inside ``device.resident_compress``).  Both paths are bit-identical,
+    so path choice is purely a speed pick; ``auto`` requires a real
+    accelerator (``not interpret``) AND the group's largest batch to
+    clear ``FUSED_ENCODE_AUTO_MIN_ELEMS`` — interpret-mode measurement
+    (see the constant's comment) shows the compaction scatter never
+    beats the staged download off-TPU.
+    """
+    if encode_path == "staged":
+        return False
+    if encode_path == "fused":
+        return True
+    return not interpret and padded_elems >= FUSED_ENCODE_AUTO_MIN_ELEMS
 
 
 def reset_transfer_counts() -> None:
@@ -149,22 +204,30 @@ class Executor:
     decompress backend the same way: ``staged`` runs the PR-2 chain of
     jitted stage programs, ``fused`` the single-dispatch Pallas kernel
     (``kernels.fused_decode``; f32 ordered decode only — other cases
-    fall back to staged), ``auto`` picks per batch.  Both are
-    bit-identical (tested against the determinism manifest).  ``put``
-    optionally places each uploaded array (e.g. a NamedSharding put
-    from distributed.compression); placement never changes bytes
-    either.
+    fall back to staged), ``auto`` picks per batch.  ``encode_path`` is
+    the compress-side twin: ``fused`` runs the lossless stage as one
+    Pallas kernel (``kernels.fused_encode``) and downloads the streams
+    device-compacted (~payload-size D2H instead of capacity-padded
+    arrays), ``staged`` keeps the PR-2 stage chain with host-side
+    compaction, ``auto`` picks per group.  All paths are bit-identical
+    (tested against the determinism manifest).  ``put`` optionally
+    places each uploaded array (e.g. a NamedSharding put from
+    distributed.compression); placement never changes bytes either.
     """
 
     def __init__(self, plan: CompressionPlan, solver: str = "auto",
-                 put=None, decode_path: str = "auto"):
+                 put=None, decode_path: str = "auto",
+                 encode_path: str = "auto"):
         if solver not in device.SOLVERS:
             raise ValueError(f"unknown solver method {solver!r}")
         if decode_path not in DECODE_PATHS:
             raise ValueError(f"unknown decode path {decode_path!r}")
+        if encode_path not in ENCODE_PATHS:
+            raise ValueError(f"unknown encode path {encode_path!r}")
         self.plan = plan
         self.solver = solver
         self.decode_path = decode_path
+        self.encode_path = encode_path
         self.put = put or (lambda a: jnp.asarray(a))
 
     # ------------------------------------------------------------ compress
@@ -190,8 +253,14 @@ class Executor:
         sizes = tuple(lay.n_tiles for lay in layouts)
         offsets = np.concatenate([[0], np.cumsum(sizes)]).astype(int)
         spans = buckets.plan_request_chunks(sizes, floor)
-
+        # one path pick per *group* (largest chunk decides) so the whole
+        # group's streams share one form through serialization
+        max_capacity = max(
+            resident_capacity(int(offsets[hi] - offsets[lo]), floor)
+            for lo, hi in spans)
         solver, interpret = device.resolve_solver(self.solver)
+        fused = use_fused_encode(self.encode_path,
+                                 max_capacity * layout0.tile_elems, interpret)
         chunks = []
         for lo, hi in spans:
             r0, r1 = int(offsets[lo]), int(offsets[hi])
@@ -206,8 +275,11 @@ class Executor:
                 ])
                 ec = np.concatenate([ec, np.ones(pad, np.float64)])
             TRANSFER_COUNTS["h2d_tiles"] += 1
+            TRANSFER_COUNTS["bytes_h2d"] += xc.nbytes
             x_dev = self.put(xc)
             TRANSFER_COUNTS["h2d_aux"] += 3
+            TRANSFER_COUNTS["bytes_h2d"] += (ec.nbytes + idx.nbytes
+                                             + mask.nbytes)
             eps_dev = self.put(ec)
             idx_dev = self.put(idx)
             mask_dev = self.put(mask)
@@ -220,6 +292,7 @@ class Executor:
                     solver=solver, interpret=interpret,
                     local_max_iters=layout0.tile_elems + 2,
                     bins_store=jnp.dtype(bins_store), bins_chunk=bins_chunk,
+                    encode_fused=fused,
                 )
             buckets.record_batch("compress", n_chunk, capacity)
             chunks.append([n_chunk, capacity, bins_s, sub_dev, local1,
@@ -230,26 +303,45 @@ class Executor:
             # one scalar sync per chunk; the width is picked from the
             # *group* maximum so chunking never changes the sub stream
             TRANSFER_COUNTS["d2h_aux"] += len(chunks)
+            TRANSFER_COUNTS["bytes_d2h"] += sum(c[6].nbytes for c in chunks)
             sub_top = max(int(c[6]) for c in chunks)
             sub_store = (np.dtype(np.int16) if sub_top < 2**15
                          else np.dtype(np.int32))
             subs_cpt, subs_chunk = chunks_per_tile(layout0, sub_store)
+            encode = device.encode_tiles_fused if fused else \
+                device.encode_tiles
             for c in chunks:
-                c.append(device.encode_tiles(
+                c.append(encode(
                     c[3].astype(jnp.dtype(sub_store)).reshape(c[1], -1),
                     subs_chunk, "raw",
                 ))
         else:
             for c in chunks:
                 c.append(None)
-        TRANSFER_COUNTS["d2h_sections"] += 1
-        host = jax.device_get([(c[2], c[7], c[4], c[5]) for c in chunks])
         ns = [c[0] for c in chunks]
-        bins_s = _cat_streams([h[0] for h in host], ns, bins_cpt)
-        subs_s = (_cat_streams([h[1] for h in host], ns, subs_cpt)
-                  if preserve_order else None)
-        local1 = np.concatenate([h[2][:n] for h, n in zip(host, ns)])
-        last_round = np.concatenate([h[3][:n] for h, n in zip(host, ns)])
+        if fused:
+            streams = []
+            for c in chunks:
+                streams.append(c[2])
+                streams.append(c[7])
+            restored, extras = fetch_compacted_streams(
+                streams, [(c[4], c[5]) for c in chunks])
+            bins_s = _cat_streams_flat(restored[0::2], ns, bins_cpt)
+            subs_s = (_cat_streams_flat(restored[1::2], ns, subs_cpt)
+                      if preserve_order else None)
+            local1 = np.concatenate([e[0][:n] for e, n in zip(extras, ns)])
+            last_round = np.concatenate(
+                [e[1][:n] for e, n in zip(extras, ns)])
+        else:
+            TRANSFER_COUNTS["d2h_sections"] += 1
+            host = jax.device_get([(c[2], c[7], c[4], c[5]) for c in chunks])
+            TRANSFER_COUNTS["bytes_d2h"] += _nbytes(host)
+            bins_s = _cat_streams([h[0] for h in host], ns, bins_cpt)
+            subs_s = (_cat_streams([h[1] for h in host], ns, subs_cpt)
+                      if preserve_order else None)
+            local1 = np.concatenate([h[2][:n] for h, n in zip(host, ns)])
+            last_round = np.concatenate(
+                [h[3][:n] for h, n in zip(host, ns)])
         return GroupStreams(bins_s, subs_s, local1, last_round, bins_cpt,
                             subs_cpt)
 
@@ -340,6 +432,10 @@ class Executor:
                 _fill_rows(sub_bitmap, sub_packed, sub_b, j * subs_cpt,
                            subs_cpt)
         TRANSFER_COUNTS["h2d_sections"] += 1
+        up = bitmap.nbytes + packed.nbytes + eps.nbytes
+        if order:
+            up += sub_bitmap.nbytes + sub_packed.nbytes
+        TRANSFER_COUNTS["bytes_h2d"] += up
         if order and fused:
             out = device.resident_decode_fused(
                 self.put(bitmap), self.put(packed),
@@ -360,7 +456,9 @@ class Executor:
                 tile_elems=tile_elems, dtype=jnp.dtype(dtype),
             )
         TRANSFER_COUNTS["d2h_values"] += 1
-        return np.asarray(out)[:n]
+        out_h = np.asarray(out)
+        TRANSFER_COUNTS["bytes_d2h"] += out_h.nbytes
+        return out_h[:n]
 
 
 def _fill_rows(bitmap: np.ndarray, packed: np.ndarray, section: bytes,
@@ -387,8 +485,89 @@ def _cat_streams(parts, ns, cpt):
     return tuple(np.concatenate(cols) for cols in zip(*sliced))
 
 
+def _nbytes(tree) -> int:
+    """Total payload bytes of every array in a pytree of fetched hosts."""
+    return sum(leaf.nbytes for leaf in jax.tree_util.tree_leaves(tree)
+               if hasattr(leaf, "nbytes"))
+
+
+def _granule_len(total: int, size: int) -> int:
+    """Granule-rounded dense-prefix length (capped at the buffer)."""
+    return min(size, -(-total // _DL_GRANULE_WORDS) * _DL_GRANULE_WORDS)
+
+
+def fetch_compacted_streams(streams, extras=()):
+    """Download device (bitmap, packed, counts) streams at ~payload size.
+
+    Each non-``None`` stream is compacted on device
+    (``device.compact_streams``: front-packed nonzero words +
+    repeat-eliminated bitmap), the per-stream totals come back as one
+    tiny ``d2h_aux`` fetch, and one ``d2h_sections`` crossing drains
+    only granule-rounded dense prefixes (plus ``extras``, e.g. solver
+    diagnostics riding the same sync).  Streams are restored host-side
+    to the flat form the serializer consumes: ``(bitmap rows,
+    front-packed nonzero words, counts)`` with counts derived exactly
+    from the bitmap popcount.  ``None`` entries pass through (the plain
+    path's empty subs slots).
+    """
+    live = [(i, device.compact_streams(s[0], s[1]))
+            for i, s in enumerate(streams) if s is not None]
+    shapes = [(streams[i][0].shape, np.dtype(streams[i][0].dtype),
+               int(np.prod(streams[i][1].shape)))
+              for i, _ in live]
+    TRANSFER_COUNTS["d2h_aux"] += 1
+    totals = jax.device_get([c[3] for _, c in live])
+    TRANSFER_COUNTS["bytes_d2h"] += _nbytes(totals)
+    fetch = []
+    for (_, c), (bshape, _, wsize), tot in zip(live, shapes, totals):
+        bsize = int(np.prod(bshape))
+        fetch.append((c[0], c[1][: _granule_len(int(tot[1]), bsize)],
+                      c[2][: _granule_len(int(tot[0]), wsize)]))
+    TRANSFER_COUNTS["d2h_sections"] += 1
+    fetch_h, extras_h = jax.device_get((fetch, list(extras)))
+    TRANSFER_COUNTS["bytes_d2h"] += _nbytes((fetch_h, extras_h))
+    restored = [None] * len(streams)
+    for (i, _), (bshape, bdt, _), tot, (keepmap, kept, words) in zip(
+            live, shapes, totals, fetch_h):
+        restored[i] = _restore_stream(keepmap, kept, words, int(tot[0]),
+                                      int(tot[1]), bshape, bdt)
+    return restored, extras_h
+
+
+def _restore_stream(keepmap, kept, words, total_words: int,
+                    total_kept: int, bitmap_shape, bitmap_dtype):
+    """Undo the transport compaction of one stream (exact inverses:
+    repeat-restore for the bitmap, popcount for the counts)."""
+    rows, bwords = bitmap_shape
+    bitmap = rze.np_repeat_restore(
+        np.asarray(keepmap), np.asarray(kept[:total_kept]), rows * bwords,
+        bitmap_dtype,
+    ).reshape(rows, bwords)
+    word = bitmap_dtype.itemsize
+    bits = np.unpackbits(
+        bitmap.astype(f">u{word}").view(np.uint8).reshape(rows, -1), axis=1)
+    counts = bits.sum(axis=1).astype(np.int32)
+    return bitmap, np.asarray(words[:total_words]), counts
+
+
+def _cat_streams_flat(parts, ns, cpt):
+    """``_cat_streams`` for restored compacted streams: keep each
+    chunk's real-tile bitmap/counts rows and exactly those rows' words
+    (front-pack order is row-major, so a prefix of the dense words)."""
+    sliced = []
+    for (bitmap, data, counts), n in zip(parts, ns):
+        k = n * cpt
+        sliced.append((bitmap[:k], data[: int(counts[:k].sum())],
+                       counts[:k]))
+    if len(sliced) == 1:
+        return sliced[0]
+    return tuple(np.concatenate(cols) for cols in zip(*sliced))
+
+
 @lru_cache(maxsize=64)
 def default_executor(plan: CompressionPlan, solver: str,
-                     decode_path: str = "auto") -> Executor:
+                     decode_path: str = "auto",
+                     encode_path: str = "auto") -> Executor:
     """Shared executors for the common no-custom-put case."""
-    return Executor(plan, solver, decode_path=decode_path)
+    return Executor(plan, solver, decode_path=decode_path,
+                    encode_path=encode_path)

@@ -87,6 +87,7 @@ def serve_compression(args):
                              batch_tiles=args.batch_tiles),
         solver=args.solver,
         decode_path=args.decode_path,
+        encode_path=args.encode_path,
         max_delay_ms=args.max_delay_ms,
         max_batch_requests=args.max_batch,
         max_queue=args.max_queue,
@@ -226,6 +227,7 @@ def serve_store(args):
                              batch_tiles=args.batch_tiles),
         solver=args.solver,
         decode_path=args.decode_path,
+        encode_path=args.encode_path,
         max_delay_ms=args.max_delay_ms,
         max_batch_requests=args.max_batch,
         max_queue=args.max_queue,
@@ -427,6 +429,13 @@ def main():
                          "the fused Pallas decode kernel, or auto "
                          "(fused above a measured batch-size crossover; "
                          "bytes are path-independent)")
+    ap.add_argument("--encode-path", default="auto",
+                    choices=["staged", "fused", "auto"],
+                    help="compress kernel path: staged program chain, or "
+                         "the fused Pallas encode kernel with the "
+                         "device-compacted ~payload-size download; auto "
+                         "picks fused above a measured batch-size "
+                         "crossover (bytes are path-independent)")
     args = ap.parse_args()
 
     if args.store:

@@ -59,6 +59,8 @@ class ServiceMetrics:
     mbps: float = 0.0                     # payload MB / batch-busy second
     per_kind: dict = field(default_factory=dict)
     transfers: dict = field(default_factory=dict)
+    bytes_h2d: int = 0                    # total uploaded payload bytes
+    bytes_d2h: int = 0                    # total downloaded payload bytes
 
     def lines(self) -> list[str]:
         """Human-readable summary (one string per line)."""
@@ -82,6 +84,8 @@ class ServiceMetrics:
             f"{self.bucket_batches}",
             f"throughput {self.mbps:.1f} MB/s busy; per kind {self.per_kind}",
             f"transfers  {self.transfers}",
+            f"xfer bytes {self.bytes_h2d / 1e6:.1f} MB up, "
+            f"{self.bytes_d2h / 1e6:.1f} MB down",
         ]
 
 
@@ -221,5 +225,10 @@ class MetricsRecorder:
                     if self.busy_seconds else 0.0
                 ),
                 per_kind=dict(self.per_kind),
-                transfers=dict(self.transfers),
+                # byte totals ride the same counter stream as the
+                # crossing counts but print as their own row
+                transfers={k: v for k, v in self.transfers.items()
+                           if not k.startswith("bytes_")},
+                bytes_h2d=int(self.transfers.get("bytes_h2d", 0)),
+                bytes_d2h=int(self.transfers.get("bytes_d2h", 0)),
             )

@@ -96,17 +96,18 @@ class ServiceOverloaded(RuntimeError):
 class ServiceConfig:
     """Service tuning knobs.
 
-    ``plan``/``solver``/``decode_path`` pin the one engine configuration
-    every request shares (the keyed program cache); ``max_delay_ms`` is
-    the most a lone request waits for company (latency floor under light
-    load); ``max_batch_requests`` caps a drained batch (latency ceiling
-    under heavy load); ``max_queue`` bounds memory and is the
-    backpressure threshold.
+    ``plan``/``solver``/``decode_path``/``encode_path`` pin the one
+    engine configuration every request shares (the keyed program cache);
+    ``max_delay_ms`` is the most a lone request waits for company
+    (latency floor under light load); ``max_batch_requests`` caps a
+    drained batch (latency ceiling under heavy load); ``max_queue``
+    bounds memory and is the backpressure threshold.
     """
 
     plan: CompressionPlan = field(default_factory=CompressionPlan)
     solver: str = "auto"
     decode_path: str = "auto"
+    encode_path: str = "auto"
     max_batch_requests: int = 64
     max_delay_ms: float = 2.0
     max_queue: int = 512
@@ -115,6 +116,8 @@ class ServiceConfig:
     def __post_init__(self):
         if self.decode_path not in ("staged", "fused", "auto"):
             raise ValueError(f"unknown decode path {self.decode_path!r}")
+        if self.encode_path not in ("staged", "fused", "auto"):
+            raise ValueError(f"unknown encode path {self.encode_path!r}")
         if self.max_batch_requests < 1:
             raise ValueError("max_batch_requests must be >= 1")
         if self.max_delay_ms < 0:
@@ -482,7 +485,7 @@ class CompressionService:
                 lambda ms, cb: engine.compress_many(
                     [p.args[0] for p in ms], [p.args[1] for p in ms], mode,
                     order, self.config.solver, self.config.plan,
-                    group_cb=cb,
+                    group_cb=cb, encode_path=self.config.encode_path,
                 ),
             )
         for (mode, order), members in chain_groups.items():
@@ -492,7 +495,7 @@ class CompressionService:
                     [p.args[0] for p in ms], [p.args[1] for p in ms], mode,
                     order, self.config.solver, self.config.plan,
                     keyframe_interval=[p.args[4] for p in ms],
-                    group_cb=cb,
+                    group_cb=cb, encode_path=self.config.encode_path,
                 ),
             )
         if dec_items:

@@ -65,8 +65,11 @@ from ..engine.executor import (
     CAPACITY_FLOOR,
     TRANSFER_COUNTS,
     _fill_rows,
+    _nbytes,
     chunks_per_tile,
+    fetch_compacted_streams,
     resident_capacity,
+    use_fused_encode,
 )
 from ..engine.plan import (
     CompressionPlan,
@@ -190,6 +193,7 @@ def compress_chains(
     return_stats: bool = False,
     put=None,
     group_cb=None,
+    encode_path: str = "auto",
 ):
     """Compress a batch of frame sequences into v3 chain containers.
 
@@ -200,6 +204,9 @@ def compress_chains(
     the same time step of concurrent chains are coalesced into shared
     device-resident batches, grouped by (dtype, tile shape, frame kind,
     stored width) — group composition never changes a chain's bytes.
+    ``encode_path`` selects the lossless-stage backend per step
+    (``staged``/``fused``/``auto``, see ``executor.Executor``); paths
+    are byte-identical.
 
     Returns a list of blobs, or (blobs, stats) when ``return_stats``.
     """
@@ -241,7 +248,8 @@ def compress_chains(
                     "n_tiles": sum(r.layout.n_tiles for r in members),
                 })
             _compress_chain_step(members, t, kind, store, dtype,
-                                 preserve_order, solver, plan, put)
+                                 preserve_order, solver, plan, put,
+                                 encode_path)
 
     blobs = [_serialize_chain(r, preserve_order) for r in reqs]
     if return_stats:
@@ -250,13 +258,16 @@ def compress_chains(
 
 
 def _compress_chain_step(members, t, kind, store, dtype, preserve_order,
-                         solver, plan, put):
+                         solver, plan, put, encode_path: str = "auto"):
     """One resident step: frame ``t`` of every chain in one group.
 
     Mirrors the executor's compress group (one tile upload, one stream
     download), plus the temporal stages: the previous step's resident
     bins predict this frame, and this frame's bins stay resident as the
-    next step's predictor.
+    next step's predictor.  ``encode_path`` routes the lossless stage
+    through the fused Pallas kernel + compacted download exactly like a
+    snapshot group (the quantize frontend always runs staged here — the
+    resident predictor needs the bin grid as an array either way).
     """
     layout0 = members[0].layout
     nan = np.asarray(np.nan, dtype)
@@ -283,9 +294,14 @@ def _compress_chain_step(members, t, kind, store, dtype, preserve_order,
         eps_tiles = np.concatenate([eps_tiles, np.ones(pad, np.float64)])
 
     solver_c, interpret = device.resolve_solver(solver)
+    fused = use_fused_encode(encode_path, capacity * layout0.tile_elems,
+                             interpret)
+    encode = device.encode_tiles_fused if fused else device.encode_tiles
     TRANSFER_COUNTS["h2d_tiles"] += 1
+    TRANSFER_COUNTS["bytes_h2d"] += x_tiles.nbytes
     x_dev = put(x_tiles)
     TRANSFER_COUNTS["h2d_aux"] += 1
+    TRANSFER_COUNTS["bytes_h2d"] += eps_tiles.nbytes
     eps_dev = put(eps_tiles)
 
     bins_enc, flags = device.resident_frontend(
@@ -302,7 +318,7 @@ def _compress_chain_step(members, t, kind, store, dtype, preserve_order,
             prevs.append(jnp.zeros((pad,) + layout0.tile, bins_enc.dtype))
         stream_ints = device.residual_tiles(bins_enc, jnp.concatenate(prevs))
         transform = "zigzag"
-    bins_s = device.encode_tiles(
+    bins_s = encode(
         stream_ints.astype(bins_store).reshape(capacity, -1),
         bins_chunk, transform,
     )
@@ -313,6 +329,7 @@ def _compress_chain_step(members, t, kind, store, dtype, preserve_order,
         layouts = tuple(r.layout for r in members)
         idx, mask = halo.group_index(layouts, capacity)
         TRANSFER_COUNTS["h2d_aux"] += 2
+        TRANSFER_COUNTS["bytes_h2d"] += idx.nbytes + mask.nbytes
         idx_dev, mask_dev = put(idx), put(mask)
         max_rounds = jnp.asarray(n_total * layout0.tile_elems + 2, jnp.int64)
         sub, local1, last_round = device.resident_solve(
@@ -320,22 +337,35 @@ def _compress_chain_step(members, t, kind, store, dtype, preserve_order,
             interpret=interpret, local_max_iters=layout0.tile_elems + 2,
         )
         TRANSFER_COUNTS["d2h_aux"] += 1  # one scalar at the solve sync
-        sub_store = (np.dtype(np.int16)
-                     if int(device._sub_max(sub)) < 2**15
+        sub_max = device._sub_max(sub)
+        TRANSFER_COUNTS["bytes_d2h"] += sub_max.nbytes
+        sub_store = (np.dtype(np.int16) if int(sub_max) < 2**15
                      else np.dtype(np.int32))
         subs_cpt, subs_chunk = chunks_per_tile(layout0, sub_store)
-        subs_s = device.encode_tiles(
+        subs_s = encode(
             sub.astype(jnp.dtype(sub_store)).reshape(capacity, -1),
             subs_chunk, "raw",
         )
 
-    TRANSFER_COUNTS["d2h_sections"] += 1
-    if preserve_order:
-        bins_s, subs_s, local1, last_round = jax.device_get(
-            (bins_s, subs_s, local1, last_round)
-        )
+    if fused:
+        streams = [bins_s, subs_s] if preserve_order else [bins_s]
+        restored, extras = fetch_compacted_streams(
+            streams, (local1, last_round) if preserve_order else ())
+        bins_s = restored[0]
+        if preserve_order:
+            subs_s = restored[1]
+            local1, last_round = extras
     else:
-        bins_s = jax.device_get(bins_s)
+        TRANSFER_COUNTS["d2h_sections"] += 1
+        if preserve_order:
+            bins_s, subs_s, local1, last_round = jax.device_get(
+                (bins_s, subs_s, local1, last_round)
+            )
+            TRANSFER_COUNTS["bytes_d2h"] += _nbytes(
+                (bins_s, subs_s, local1, last_round))
+        else:
+            bins_s = jax.device_get(bins_s)
+            TRANSFER_COUNTS["bytes_d2h"] += _nbytes(bins_s)
 
     bins_sections = _serialize_tile_sections(bins_s, n_total, bins_cpt)
     if preserve_order:
@@ -389,10 +419,11 @@ def _chain_stats(r: _Chain, blob: bytes) -> ChainStats:
 
 def compress_chain(frames, eb, mode="noa", preserve_order=True, solver="auto",
                    plan=None, keyframe_interval=DEFAULT_KEYFRAME_INTERVAL,
-                   return_stats=False, put=None):
+                   return_stats=False, put=None, encode_path="auto"):
     """Single-chain convenience wrapper over :func:`compress_chains`."""
     out = compress_chains([frames], eb, mode, preserve_order, solver, plan,
-                          keyframe_interval, return_stats, put)
+                          keyframe_interval, return_stats, put,
+                          encode_path=encode_path)
     if return_stats:
         blobs, stats = out
         return blobs[0], stats[0]
@@ -426,6 +457,7 @@ def encode_appended_frame(
     preserve_order: bool = True,
     solver: str = "auto",
     plan: CompressionPlan | None = None,
+    encode_path: str = "auto",
 ):
     """Encode ONE frame as if it were the next step of an existing chain.
 
@@ -462,7 +494,7 @@ def encode_appended_frame(
     step = _AppendStep(x, eps_eff, layout, prev_bins)
     _compress_chain_step(
         [step], 0, kind, store, np.dtype(x.dtype),
-        preserve_order, solver, plan, lambda a: jnp.asarray(a),
+        preserve_order, solver, plan, lambda a: jnp.asarray(a), encode_path,
     )
     return step.sections[0], nonfinite, max_bin, step.sweeps
 
@@ -527,6 +559,7 @@ class ChainDecoder:
         for j, section in enumerate(sections):
             _fill_rows(bitmap, packed, section, j * cpt, cpt)
         TRANSFER_COUNTS["h2d_sections"] += 1
+        TRANSFER_COUNTS["bytes_h2d"] += bitmap.nbytes + packed.nbytes
         return jnp.asarray(bitmap), jnp.asarray(packed)
 
     def step(self, t: int):
@@ -576,7 +609,9 @@ class ChainDecoder:
             self.bins, subs, jnp.asarray(eps), jnp.dtype(self.dtype)
         )
         TRANSFER_COUNTS["d2h_values"] += 1
-        values = np.asarray(out)[:n].reshape((n,) + self.layout.tile)
+        out_h = np.asarray(out)
+        TRANSFER_COUNTS["bytes_d2h"] += out_h.nbytes
+        values = out_h[:n].reshape((n,) + self.layout.tile)
         field = assemble_interiors(values, self.layout, self.c.header.shape)
         if self.c.entries[t].flags & FLAG_HAS_NONFINITE:
             field = decode_nonfinite(nonfinite, field)

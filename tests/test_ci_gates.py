@@ -47,6 +47,19 @@ def _bench():
                 },
             },
         },
+        "encode_paths": {
+            "auto_min_elems": 1024 * 1024,
+            "fields": {
+                "miranda": {
+                    "payload_bytes": 424135,
+                    "fused": {"bytes_d2h_per_compress": 464084.0},
+                },
+                "isabel": {
+                    "payload_bytes": 351141,
+                    "fused": {"bytes_d2h_per_compress": 366548.0},
+                },
+            },
+        },
     }
 
 
@@ -91,6 +104,39 @@ def test_missing_field_fails():
     baseline = extract_baseline(bench)
     del bench["fields"]["isabel"]
     assert any("missing" in p for p in check(baseline, bench))
+
+
+def test_encode_d2h_growth_fails():
+    # the compaction leak failure mode: fused downloads grow past the
+    # committed per-field bytes
+    bench = _bench()
+    baseline = extract_baseline(bench)
+    row = bench["encode_paths"]["fields"]["isabel"]
+    row["fused"]["bytes_d2h_per_compress"] *= 1.03  # still under ceiling
+    problems = check(baseline, bench)
+    assert len(problems) == 1 and "isabel" in problems[0]
+    assert "compaction" in problems[0]
+
+
+def test_encode_d2h_payload_ceiling_fails():
+    # committed bytes unchanged but the container shrank: the download
+    # must still stay under the 1.1x-payload ceiling of the SAME run
+    bench = _bench()
+    baseline = extract_baseline(bench)
+    row = bench["encode_paths"]["fields"]["miranda"]
+    row["payload_bytes"] = int(
+        row["fused"]["bytes_d2h_per_compress"] / 1.2)
+    problems = check(baseline, bench)
+    assert len(problems) == 1 and "miranda" in problems[0]
+    assert "1.1x" in problems[0]
+
+
+def test_encode_field_missing_from_bench_fails():
+    bench = _bench()
+    baseline = extract_baseline(bench)
+    del bench["encode_paths"]["fields"]["isabel"]
+    assert any("encode_paths" in p and "missing" in p
+               for p in check(baseline, bench))
 
 
 def test_config_drift_fails():

@@ -287,3 +287,59 @@ def test_sharded_executor_is_byte_identical(rng):
     # placement must not change bytes
     assert compress_fields_sharded(fields, 1e-2, mesh) == \
         engine.compress_many(fields, 1e-2)
+
+
+# ------------------------------------------------- encode-path contract
+
+def test_encode_path_flag_is_byte_identical(rng):
+    """encode_path staged/fused/auto must emit identical containers —
+    f32 and f64 (this file also runs under the x64 CI leg), plain and
+    order-preserving."""
+    for dtype in (np.float32, np.float64):
+        x = rng.standard_normal((20, 18, 16)).astype(dtype)
+        for order in (False, True):
+            staged = engine.compress(x, 1e-2, preserve_order=order,
+                                     encode_path="staged")
+            for path in ("fused", "auto"):
+                b = engine.compress(x, 1e-2, preserve_order=order,
+                                    encode_path=path)
+                assert b == staged, (np.dtype(dtype), order, path)
+
+
+def test_unknown_encode_path_rejected():
+    with pytest.raises(ValueError, match="encode path"):
+        executor.Executor(CompressionPlan(), encode_path="nope")
+    with pytest.raises(ValueError, match="unknown decode path"):
+        executor.Executor(CompressionPlan(), decode_path="nope")
+
+
+def test_fused_encode_download_is_near_payload_size(rng):
+    """The tentpole's transfer claim: with the fused path, compress-side
+    D2H bytes stay within 1.1x of the serialized container (vs the
+    capacity-padded staged download, a multiple of it)."""
+    x = np.cumsum(rng.standard_normal((40, 40, 40)), axis=0).astype(
+        np.float32)
+    executor.reset_transfer_counts()
+    blob = engine.compress(x, 1e-3, encode_path="fused")
+    d2h = executor.TRANSFER_COUNTS["bytes_d2h"]
+    assert 0 < d2h <= 1.1 * len(blob), (d2h, len(blob))
+
+    executor.reset_transfer_counts()
+    staged = engine.compress(x, 1e-3, encode_path="staged")
+    assert staged == blob
+    assert executor.TRANSFER_COUNTS["bytes_d2h"] > d2h
+
+
+def test_fused_encode_steady_state_zero_retrace(rng):
+    """A second fused-path compress in a warm bucket must add no jit
+    traces: the compacted download's variable-size fetches are eager
+    granule slices, never traced programs."""
+    plan = CompressionPlan(tile_shape=(8, 8, 8), batch_tiles=4)
+    engine.compress(rng.standard_normal((8, 8, 8)).astype(np.float32),
+                    1e-2, plan=plan, encode_path="fused")
+    snapshot = dict(device.TRACE_COUNTS)
+    for _ in range(2):
+        x = rng.standard_normal((7, 8, 6)).astype(np.float32)
+        engine.compress(x, 1e-2, plan=plan, encode_path="fused")
+    assert dict(device.TRACE_COUNTS) == snapshot, \
+        "fused encode path retraced within a warm bucket"

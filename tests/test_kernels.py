@@ -164,3 +164,109 @@ def test_subbin_sweep_long_chain_fewer_sweeps():
     sub_b, it_b = ops.solve_subbins_blockwise(bins, xj)
     assert np.array_equal(np.asarray(sub_j), np.asarray(sub_b))
     assert int(it_b) < int(it_j) / 3, (int(it_b), int(it_j))
+
+
+# ------------------------------------------------------- fused encode
+
+def test_fused_encode_ints_matches_staged(rng):
+    """The fused encode kernel's streams must equal the staged
+    ``device.encode_tiles`` programs exactly, across word widths and
+    transform modes (the bins/subs/temporal-residual cases)."""
+    from repro.engine import device
+    from repro.kernels import fused_encode
+
+    for dtype, chunk_len in ((np.int16, 8192), (np.int32, 4096)):
+        for transform in ("delta", "zigzag", "raw"):
+            ints = rng.integers(-50, 50, (4, 1000)).astype(dtype)
+            ints[0, :37] = 0  # leading zero run -> dead bitmap words
+            got = fused_encode.encode_ints_fused(
+                jnp.asarray(ints), chunk_len, transform, interpret=True)
+            want = device.encode_tiles(jnp.asarray(ints), chunk_len,
+                                       transform)
+            for g, w in zip(got, want):
+                assert np.array_equal(np.asarray(g), np.asarray(w)), \
+                    (dtype, transform)
+
+
+@pytest.mark.parametrize("batch,block_tiles", [(1, 4), (3, 2), (5, 4),
+                                               (7, 3)])
+def test_fused_encode_pads_odd_batches(rng, batch, block_tiles):
+    """Batches that don't divide ``block_tiles`` pad internally (zero
+    rows -> all-zero streams) and slice back to exactly the staged
+    output — odd row counts arrive from callers outside the bucketed
+    executor."""
+    from repro.engine import device
+    from repro.kernels import fused_encode
+
+    ints = rng.integers(-9, 9, (batch, 600)).astype(np.int32)
+    got = fused_encode.encode_ints_fused(
+        jnp.asarray(ints), 4096, "delta", interpret=True,
+        block_tiles=block_tiles)
+    want = device.encode_tiles(jnp.asarray(ints), 4096, "delta")
+    for g, w in zip(got, want):
+        assert g.shape == w.shape, (batch, block_tiles)
+        assert np.array_equal(np.asarray(g), np.asarray(w))
+
+
+def test_fused_encode_values_handles_dead_tiles(rng):
+    """The full-fusion values kernel: NaN cells (dead pad tiles, in-tile
+    pad) must encode as bin 0 exactly like the staged frontend's
+    validity masking, and live cells as the shared quantize sequence."""
+    from repro.engine import device
+    from repro.kernels import fused_encode
+
+    batch, elems = 5, 700
+    x = (rng.standard_normal((batch, elems)) * 3).astype(np.float32)
+    x[1] = np.nan          # fully dead tile (capacity pad)
+    x[3, 600:] = np.nan    # in-tile pad cells
+    eps = np.full(batch, 1e-3, np.float64)
+    got = fused_encode.encode_values_fused(
+        jnp.asarray(x), jnp.asarray(eps), 4096, jnp.float32, jnp.int32,
+        interpret=True)
+    # the staged equivalent: quantize valid cells, zero the rest, encode
+    from repro.core.quantize import quantize_broadcast
+    valid = np.isfinite(x)
+    bins = np.asarray(quantize_broadcast(
+        jnp.asarray(np.where(valid, x, 0)), jnp.asarray(eps)[:, None],
+        jnp.float32))
+    bins = np.where(valid, bins, 0).astype(np.int32)
+    want = device.encode_tiles(jnp.asarray(bins), 4096, "delta")
+    for g, w in zip(got, want):
+        assert np.array_equal(np.asarray(g), np.asarray(w))
+    assert np.asarray(got[2])[1] == 0  # dead tile -> zero-count chunk
+
+
+def test_fused_encode_matches_staged_on_determinism_cases():
+    """encode_path="fused" must emit byte-identical containers to the
+    staged chain on every snapshot case the determinism manifest pins —
+    across both solver schedules — and those bytes must still hash to
+    the committed manifest, so the fused path is held to the same
+    archived-bytes contract as the staged one."""
+    import hashlib
+    import json
+
+    from benchmarks.check_determinism import (
+        DTYPES,
+        EB,
+        MANIFEST_PATH,
+        SHAPES,
+    )
+    from repro import engine
+    from repro.data.fields import FIELD_GENERATORS, make_scientific_field
+
+    manifest = json.loads(MANIFEST_PATH.read_text())
+    for name in sorted(FIELD_GENERATORS):
+        for shape in SHAPES:
+            for dtype in DTYPES:
+                x = make_scientific_field(name, shape, np.dtype(dtype),
+                                          seed=5)
+                case = f"{name}/{'x'.join(map(str, shape))}/{dtype}"
+                for solver in ("jacobi", "blockwise"):
+                    staged = engine.compress(x, EB, solver=solver,
+                                             encode_path="staged")
+                    fused = engine.compress(x, EB, solver=solver,
+                                            encode_path="fused")
+                    assert fused == staged, \
+                        f"encode_path=fused diverged on {case}/{solver}"
+                    assert (hashlib.sha256(fused).hexdigest()
+                            == manifest[case]), case

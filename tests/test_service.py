@@ -454,3 +454,25 @@ def test_config_validation():
         ServiceConfig(max_delay_ms=-1)
     with pytest.raises(ValueError):
         ServiceConfig(max_queue=0)
+
+
+def test_encode_path_config_is_validated_and_byte_neutral(rng):
+    """ServiceConfig.encode_path rejects unknown values and never
+    changes request bytes — staged and fused services emit the same
+    container — while the metrics surface the new transfer byte totals
+    as their own fields (not mixed into the crossing counts)."""
+    with pytest.raises(ValueError, match="encode path"):
+        ServiceConfig(plan=PLAN, encode_path="warp")
+    x = rng.standard_normal((16, 16, 16)).astype(np.float32)
+    blobs = {}
+    for path in ("staged", "fused"):
+        cfg = ServiceConfig(plan=PLAN, solver="auto", encode_path=path,
+                            max_delay_ms=5.0)
+        with CompressionService(cfg) as svc:
+            blobs[path] = svc.compress(x, 1e-2)
+            m = svc.metrics()
+            assert m.bytes_h2d > 0 and m.bytes_d2h > 0
+            assert "bytes_h2d" not in m.transfers
+            assert "bytes_d2h" not in m.transfers
+            assert "MB up" in "\n".join(m.lines())
+    assert blobs["fused"] == blobs["staged"]

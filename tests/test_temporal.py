@@ -293,3 +293,20 @@ def test_chain_input_validation():
     with pytest.raises(ValueError, match="solver"):
         temporal.compress_chain([a], EB, solver="nope")
     assert temporal.compress_chains([], EB) == []
+
+
+def test_chain_encode_path_byte_identity():
+    """encode_path staged/fused/auto must emit identical v3 chains —
+    both frame kinds (keyframe + residual), plain and ordered, and the
+    fused path's compacted download must round-trip."""
+    frames = _sequence((13, 11, 9), 5)
+    for order in (False, True):
+        staged = temporal.compress_chain(frames, EB, preserve_order=order,
+                                         keyframe_interval=2,
+                                         encode_path="staged")
+        for path in ("fused", "auto"):
+            b = temporal.compress_chain(frames, EB, preserve_order=order,
+                                        keyframe_interval=2,
+                                        encode_path=path)
+            assert b == staged, (order, path)
+        _assert_within_bound(frames, temporal.decompress_chain(staged))
